@@ -1,0 +1,92 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU: relative numbers
+prove the fusion structure; absolute TPU timings require hardware).
+
+The fused-LADN bench is the paper-relevant one: scheduler decision latency
+is on the serving critical path (Algorithm 1 runs per task arrival).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import networks as nets
+from repro.core.agents import AgentConfig
+from repro.core.diffusion import make_schedule, run_reverse_chain
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps: int = 5, **kw) -> float:
+    out = fn(*args, **kw)
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready()
+        if hasattr(x, "block_until_ready") else x, out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready()
+        if hasattr(x, "block_until_ready") else x, out)
+    return (time.time() - t0) / reps * 1e6  # us
+
+
+def bench_kernels() -> List[str]:
+    rows = []
+    key = jax.random.key(0)
+
+    # flash attention (small: interpret mode is slow)
+    B, H, KV, S, hd = 1, 4, 2, 512, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, KV, S, hd))
+    v = jax.random.normal(ks[2], (B, KV, S, hd))
+    us = _time(ops.flash_attention, q, k, v, bq=128, bk=128,
+               interpret=True, reps=2)
+    flops = 4 * B * H * S * S * hd / 2  # causal
+    rows.append(f"kernel_flash_attention_S{S},{us:.0f},"
+                f"causal_gflop={flops/1e9:.2f}")
+
+    # flash decode
+    kc = jax.random.normal(ks[1], (2, KV, 2048, hd))
+    vc = jax.random.normal(ks[2], (2, KV, 2048, hd))
+    qd = jax.random.normal(ks[0], (2, H, hd))
+    us = _time(ops.flash_decode, qd, kc, vc, 2048, bk=256, interpret=True,
+               reps=2)
+    rows.append(f"kernel_flash_decode_S2048,{us:.0f},"
+                f"cache_mb={kc.size*2*4/1e6:.1f}")
+
+    # fused LADN chain vs unfused jnp chain (the scheduler hot loop)
+    cfg = AgentConfig()
+    S_DIM, A, I = 22, 20, 5
+    theta = nets.init_ladn(jax.random.key(1), S_DIM, A, (20, 20))
+    T = 256
+    x_I = jax.random.normal(ks[0], (T, A))
+    s = jax.random.normal(ks[1], (T, S_DIM))
+
+    us_fused = _time(ops.ladn_denoise, theta, x_I, s, ks[2], num_steps=I,
+                     state_dim=S_DIM, action_dim=A, interpret=True, reps=3)
+
+    sched = make_schedule(I)
+
+    @jax.jit
+    def unfused(theta, x_I, s, key):
+        eps_fn = lambda x, i, ss: nets.apply_ladn(theta, x, i, ss)  # noqa
+
+        def one(xi, si, k):
+            return run_reverse_chain(sched, eps_fn, xi, si, k)
+
+        keys = jax.random.split(key, T)
+        return jax.vmap(one)(x_I, s, keys)
+
+    us_unfused = _time(unfused, theta, x_I, s, ks[2], reps=3)
+    # NOTE: on CPU the fused kernel runs under the Pallas *interpreter*
+    # while the unfused chain is XLA-compiled, so the ratio here reflects
+    # interpreter overhead, not the TPU VMEM-residency win the kernel is
+    # designed for (see DESIGN.md §4).
+    rows.append(f"kernel_ladn_fused_T{T},{us_fused:.0f},"
+                f"I={I};interpret_mode=1")
+    rows.append(f"kernel_ladn_unfused_T{T},{us_unfused:.0f},"
+                f"xla_compiled=1")
+    return rows

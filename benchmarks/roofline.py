@@ -1,0 +1,54 @@
+"""Roofline summary derived from the dry-run artifacts (§Roofline).
+
+Reads results/dryrun_*.jsonl (produced by repro.launch.dryrun --all) and
+emits one CSV row per (arch x shape x mesh): the three roofline terms, the
+dominant bottleneck, and the MODEL_FLOPS / HLO_FLOPs useful-compute ratio.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load_records(path: str) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    return out
+
+
+def bench_roofline() -> List[str]:
+    rows = []
+    for fname, tag in (("dryrun_16x16.jsonl", "16x16"),
+                       ("dryrun_2x16x16.jsonl", "2x16x16")):
+        recs = load_records(os.path.join(RESULTS, fname))
+        seen = {}
+        for r in recs:  # keep the latest record per combo
+            if "bottleneck" in r:
+                seen[(r["arch"], r["shape"])] = r
+        for (arch, shape), r in sorted(seen.items()):
+            dom = {"compute": r["compute_s"], "memory": r["memory_s"],
+                   "collective": r["collective_s"]}[r["bottleneck"]]
+            us = dom * 1e6
+            ratio = r.get("useful_ratio")
+            rows.append(
+                f"roofline_{tag}/{arch}/{shape},{us:.1f},"
+                f"bottleneck={r['bottleneck']};"
+                f"compute={r['compute_s']:.2e};"
+                f"memory={r['memory_s']:.2e};"
+                f"collective={r['collective_s']:.2e};"
+                f"useful={'' if ratio is None else f'{ratio:.2f}'}")
+        if not seen:
+            rows.append(f"roofline_{tag}/missing,0,"
+                        "run `python -m repro.launch.dryrun --all --out "
+                        f"results/{fname}` first")
+    return rows

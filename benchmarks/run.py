@@ -1,0 +1,83 @@
+"""Benchmark harness: one bench per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run                # quick scale
+  PYTHONPATH=src python -m benchmarks.run --scale paper  # Table-III scale
+  PYTHONPATH=src python -m benchmarks.run --only fig5,kernels
+
+Mapping to the paper:
+  fig5     -> Fig. 5   learning curves + convergence episodes
+  fig6a    -> Fig. 6a  delay vs number of tasks
+  fig6b    -> Fig. 6b  delay vs ES capacity
+  fig7a    -> Fig. 7a  delay vs quality demand z
+  fig7b    -> Fig. 7b  delay vs number of BSs
+  fig8     -> Fig. 8   denoising steps I / entropy temperature alpha
+  tablev   -> Table V  centralized vs distributed serving makespan
+  kernels  -> (systems) Pallas kernel microbenches
+  roofline -> (systems) dry-run roofline terms per (arch x shape x mesh)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=["quick", "paper"], default="quick")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig5,fig6a,fig6b,fig7a,fig7b,fig8,"
+                         "tablev,kernels,roofline")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    rows = []
+    t0 = time.time()
+
+    if want("fig5"):
+        from benchmarks.scheduling import bench_fig5_learning
+        r, _ = bench_fig5_learning(args.scale)
+        rows += r
+    if want("fig6a"):
+        from benchmarks.scheduling import bench_sweep
+        vals = (10, 30, 50, 70) if args.scale == "paper" else (4, 8, 12)
+        rows += bench_sweep(args.scale, "max_tasks", vals)
+    if want("fig6b"):
+        from benchmarks.scheduling import bench_sweep
+        vals = (30, 50, 70) if args.scale == "paper" else (20, 40)
+        rows += bench_sweep(args.scale, "f_hi", vals)
+    if want("fig7a"):
+        from benchmarks.scheduling import bench_sweep
+        vals = (5, 10, 15, 20) if args.scale == "paper" else (5, 15)
+        rows += bench_sweep(args.scale, "z_hi", vals)
+    if want("fig7b"):
+        from benchmarks.scheduling import bench_sweep
+        vals = (10, 20, 30, 40) if args.scale == "paper" else (4, 8)
+        rows += bench_sweep(args.scale, "num_bs", vals)
+    if want("fig8"):
+        from benchmarks.scheduling import bench_fig8_params
+        rows += bench_fig8_params(args.scale)
+    if want("tablev"):
+        from benchmarks.serving import bench_tablev
+        rows += bench_tablev()
+    if want("kernels"):
+        from benchmarks.kernels import bench_kernels
+        rows += bench_kernels()
+    if want("roofline"):
+        from benchmarks.roofline import bench_roofline
+        rows += bench_roofline()
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+    print(f"# total bench wall time: {time.time()-t0:.1f}s",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

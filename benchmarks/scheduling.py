@@ -1,0 +1,141 @@
+"""Scheduling benchmarks mirroring the paper's Figs. 5-8.
+
+Two scales:
+  quick  — shrunk env (CI-friendly, minutes): relative ordering only.
+  paper  — Table III parameters (B=20, N<=50, |T|=60, 60+ episodes):
+           reproduces the headline claims; results recorded in
+           EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.core.agents import AgentConfig
+from repro.core.diffusion import DiffusionPolicyConfig
+from repro.core.env import EnvParams
+from repro.core.trainer import evaluate_method, train_method
+
+
+def env_for_scale(scale: str, **overrides) -> EnvParams:
+    if scale == "paper":
+        base = EnvParams()                      # Table III defaults
+    else:
+        base = EnvParams(num_bs=6, num_slots=15, max_tasks=8)
+    return dataclasses.replace(base, **overrides)
+
+
+def episodes_for_scale(scale: str) -> int:
+    return 60 if scale == "paper" else 12
+
+
+def agent_cfg(scale: str, **overrides) -> AgentConfig:
+    return dataclasses.replace(
+        AgentConfig(train_after=300 if scale == "paper" else 60,
+                    replay_capacity=1000 if scale == "paper" else 300),
+        **overrides)
+
+
+def convergence_episode(delays: List[float], tol: float = 0.05) -> int:
+    """First episode from which the delay stays within tol of the final
+    plateau (the paper's 'converged after N episodes' metric)."""
+    arr = np.asarray(delays)
+    plateau = arr[-max(3, len(arr) // 5):].mean()
+    for i, d in enumerate(arr):
+        if abs(d - plateau) <= tol * plateau and \
+                (np.abs(arr[i:] - plateau) <= 3 * tol * plateau).mean() > 0.7:
+            return i
+    return len(arr) - 1
+
+
+def bench_fig5_learning(scale: str, seed: int = 0) -> List[str]:
+    """Fig. 5: learning curves + convergence episodes + final delay."""
+    p = env_for_scale(scale)
+    cfg = agent_cfg(scale)
+    eps = episodes_for_scale(scale)
+    rows = []
+    curves: Dict[str, List[float]] = {}
+    for method in ("lad-ts", "d2sac-ts", "sac-ts", "dqn-ts", "opt-ts",
+                   "random-ts"):
+        key = jax.random.key(seed)
+        t0 = time.time()
+        n_eps = eps if method in ("lad-ts", "d2sac-ts", "sac-ts",
+                                  "dqn-ts") else 3
+        delays, _ = train_method(method, p, cfg, episodes=n_eps, key=key)
+        wall = time.time() - t0
+        curves[method] = delays
+        final = float(np.mean(delays[-3:]))
+        conv = convergence_episode(delays) if n_eps > 5 else 0
+        us = wall / max(n_eps, 1) * 1e6
+        rows.append(f"fig5_learning/{method},{us:.0f},"
+                    f"final_delay={final:.3f}s;converged_ep={conv}")
+    return rows, curves
+
+
+def bench_sweep(scale: str, param: str, values, seed: int = 1,
+                methods=("lad-ts", "sac-ts", "opt-ts")) -> List[str]:
+    """Figs. 6-7: delay vs an environment parameter.
+
+    param in {max_tasks, f_hi, z_hi, num_bs}.
+    """
+    rows = []
+    for v in values:
+        over = {}
+        if param == "max_tasks":
+            over["max_tasks"] = int(v)
+        elif param == "f_hi":
+            over["f_range"] = (10.0, float(v))
+        elif param == "z_hi":
+            over["z_range"] = (1.0, float(v))
+        elif param == "num_bs":
+            over["num_bs"] = int(v)
+        p = env_for_scale(scale, **over)
+        cfg = agent_cfg(scale)
+        eps = max(episodes_for_scale(scale) // 2, 6)
+        for method in methods:
+            key = jax.random.key(seed)
+            t0 = time.time()
+            n_eps = eps if method not in ("opt-ts", "random-ts",
+                                          "local-ts") else 1
+            delays, states = train_method(method, p, cfg, episodes=n_eps,
+                                          key=key)
+            final = evaluate_method(method, p, cfg, states,
+                                    jax.random.key(seed + 1),
+                                    n_episodes=2)
+            us = (time.time() - t0) / max(n_eps, 1) * 1e6
+            rows.append(f"sweep_{param}={v}/{method},{us:.0f},"
+                        f"delay={final:.3f}s")
+    return rows
+
+
+def bench_fig8_params(scale: str, seed: int = 2) -> List[str]:
+    """Fig. 8: denoising steps I and entropy temperature alpha."""
+    p = env_for_scale(scale)
+    eps = max(episodes_for_scale(scale) // 2, 6)
+    rows = []
+    for I in (1, 3, 5, 8):
+        cfg = agent_cfg(scale,
+                        diffusion=DiffusionPolicyConfig(num_steps=I))
+        t0 = time.time()
+        delays, states = train_method("lad-ts", p, cfg, episodes=eps,
+                                      key=jax.random.key(seed))
+        final = evaluate_method("lad-ts", p, cfg, states,
+                                jax.random.key(seed + 1), n_episodes=2)
+        us = (time.time() - t0) / eps * 1e6
+        rows.append(f"fig8a_denoise_I={I}/lad-ts,{us:.0f},"
+                    f"delay={final:.3f}s")
+    for alpha in (0.01, 0.05, 0.2):
+        cfg = agent_cfg(scale, init_alpha=alpha)
+        t0 = time.time()
+        delays, states = train_method("lad-ts", p, cfg, episodes=eps,
+                                      key=jax.random.key(seed))
+        final = evaluate_method("lad-ts", p, cfg, states,
+                                jax.random.key(seed + 1), n_episodes=2)
+        us = (time.time() - t0) / eps * 1e6
+        rows.append(f"fig8b_alpha={alpha}/lad-ts,{us:.0f},"
+                    f"delay={final:.3f}s")
+    return rows

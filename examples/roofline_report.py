@@ -1,0 +1,74 @@
+"""Print the roofline / dry-run summary from the committed artifacts.
+
+    PYTHONPATH=src python examples/roofline_report.py [--pair dbrx-132b decode_32k]
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+
+def load(path):
+    recs = {}
+    if not os.path.exists(path):
+        return recs
+    for line in open(path):
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if "bottleneck" in r:
+            recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--pair", nargs=2, default=None,
+                    metavar=("ARCH", "SHAPE"))
+    args = ap.parse_args()
+
+    single = load(os.path.join(args.results, "dryrun_16x16.jsonl"))
+    multi = load(os.path.join(args.results, "dryrun_2x16x16.jsonl"))
+    print(f"single-pod combos: {len(single)}; multi-pod: {len(multi)}\n")
+
+    if args.pair:
+        key = tuple(args.pair)
+        for name, recs in (("16x16", single), ("2x16x16", multi)):
+            r = recs.get(key)
+            if not r:
+                continue
+            print(f"--- {key[0]} x {key[1]} on {name} "
+                  f"(tag={r.get('tag')}) ---")
+            print(f"  compute    {r['compute_s']:.3e} s")
+            print(f"  memory     {r['memory_s']:.3e} s")
+            print(f"  collective {r['collective_s']:.3e} s   "
+                  f"<- bottleneck: {r['bottleneck']}")
+            print(f"  useful-compute ratio {r.get('useful_ratio')}")
+            print(f"  collectives by kind: "
+                  f"{ {k: f'{v/1e9:.1f}GB' for k, v in r.get('collective_by_kind', {}).items()} }")
+        return
+
+    from collections import Counter
+    print("bottleneck census (single-pod):",
+          dict(Counter(r["bottleneck"] for r in single.values())))
+    worst = sorted((r for r in single.values() if r.get("useful_ratio")),
+                   key=lambda r: r["useful_ratio"])[:5]
+    print("\nlowest useful-compute ratios:")
+    for r in worst:
+        print(f"  {r['arch']:24s} {r['shape']:12s} "
+              f"useful={r['useful_ratio']:.3f} ({r['bottleneck']})")
+    slowest = sorted(single.values(), key=lambda r: -max(
+        r["compute_s"], r["memory_s"], r["collective_s"]))[:5]
+    print("\nheaviest steps (dominant term, single-pod):")
+    for r in slowest:
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        print(f"  {r['arch']:24s} {r['shape']:12s} {dom:.2e}s "
+              f"({r['bottleneck']})")
+
+
+if __name__ == "__main__":
+    main()

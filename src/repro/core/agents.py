@@ -1,0 +1,414 @@
+"""Scheduling agents: LAD-TS (the paper), D2SAC-TS, SAC-TS, DQN-TS, and the
+non-learned Opt-TS / Random-TS / Local-TS heuristics.
+
+All agents are pure-functional over NamedTuple states so one jitted episode
+scan can vmap them over the B per-ES schedulers (the paper's distributed
+deployment: one agent / latent store / experience pool per edge server).
+
+LAD-TS (paper §IV):
+  * actor = LADN reverse-diffusion chain conditioned on the state, started
+    from the *latent action* X_b[n] (last x_0 for the same task slot)
+    instead of Gaussian noise;
+  * critics / targets / entropy temperature follow discrete soft
+    actor-critic (Eqns 14-17); the acting network theta~ (s-LADN) is a
+    copy of the trained theta (t-LADN) refreshed after every update
+    (Algorithm 1 line 18).
+
+D2SAC-TS is LAD-TS with ``latent_init=False`` (chains start from noise and
+the latent store is never read), matching Du et al.'s diffusion SAC.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import networks as nets
+from repro.core.diffusion import (DiffusionPolicyConfig, make_schedule,
+                                  run_reverse_chain)
+from repro.core.optim import AdamState, adam_init, adam_update
+from repro.core.replay import ReplayState, replay_add, replay_init, \
+    replay_sample
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentConfig:
+    """Model hyper-parameters (paper Table IV)."""
+
+    hidden: Tuple[int, ...] = (20, 20)
+    lr_actor: float = 1e-4
+    lr_critic: float = 1e-3
+    lr_alpha: float = 3e-4
+    gamma: float = 0.95
+    tau: float = 0.005
+    batch_size: int = 64
+    replay_capacity: int = 1000
+    train_after: int = 300          # |R| > 300 before updates (Alg. 1)
+    init_alpha: float = 0.05
+    target_entropy: float = -1.0
+    # rewards are -delay (seconds); the scale conditions critic targets so
+    # heavy-load envs (delays of tens of seconds) don't blow up the MSE.
+    reward_scale: float = 0.1
+    diffusion: DiffusionPolicyConfig = DiffusionPolicyConfig()
+    # DQN-only
+    eps_start: float = 0.9
+    eps_end: float = 0.05
+    eps_decay_steps: int = 2000
+
+
+class Transition(NamedTuple):
+    s: jnp.ndarray
+    x: jnp.ndarray        # latent action x_I used for this decision
+    a: jnp.ndarray        # () int32
+    r: jnp.ndarray        # () f32
+    s_next: jnp.ndarray
+    x_next: jnp.ndarray
+
+
+def transition_spec(state_dim: int, action_dim: int) -> Transition:
+    f = jnp.zeros
+    return Transition(s=f((state_dim,)), x=f((action_dim,)),
+                      a=jnp.zeros((), jnp.int32), r=jnp.zeros(()),
+                      s_next=f((state_dim,)), x_next=f((action_dim,)))
+
+
+# ===========================================================================
+# LAD-TS (and D2SAC-TS via cfg.diffusion.latent_init=False)
+# ===========================================================================
+
+
+class LadtsState(NamedTuple):
+    theta: Any            # t-LADN (trained)
+    theta_act: Any        # s-LADN (acting copy)
+    c1: Any
+    c2: Any
+    t1: Any
+    t2: Any
+    log_alpha: jnp.ndarray
+    opt_theta: AdamState
+    opt_c1: AdamState
+    opt_c2: AdamState
+    opt_alpha: AdamState
+    X: jnp.ndarray        # (N_max, A) latent action store
+    replay: ReplayState
+    steps: jnp.ndarray
+
+
+def ladts_init(key, cfg: AgentConfig, state_dim: int, action_dim: int,
+               n_max: int) -> LadtsState:
+    ks = jax.random.split(key, 6)
+    theta = nets.init_ladn(ks[0], state_dim, action_dim, cfg.hidden)
+    c1 = nets.init_critic(ks[1], state_dim, action_dim, cfg.hidden)
+    c2 = nets.init_critic(ks[2], state_dim, action_dim, cfg.hidden)
+    X = jax.random.normal(ks[3], (n_max, action_dim))
+    return LadtsState(
+        theta=theta, theta_act=jax.tree_util.tree_map(lambda x: x, theta),
+        c1=c1, c2=c2,
+        t1=jax.tree_util.tree_map(lambda x: x, c1),
+        t2=jax.tree_util.tree_map(lambda x: x, c2),
+        log_alpha=jnp.log(jnp.asarray(cfg.init_alpha)),
+        opt_theta=adam_init(theta), opt_c1=adam_init(c1),
+        opt_c2=adam_init(c2),
+        opt_alpha=adam_init(jnp.zeros(())),
+        X=X,
+        replay=replay_init(cfg.replay_capacity,
+                           transition_spec(state_dim, action_dim)),
+        steps=jnp.zeros((), jnp.int32),
+    )
+
+
+def _policy_probs(theta, cfg: AgentConfig, s, x_latent, key):
+    """Differentiable pi(.|s, latent): reverse chain + softmax.
+
+    ``x_latent`` is the RAW stored latent (or anything, ignored when
+    latent_init=False).  The forward-process noising to level I (Eqn 11)
+    happens HERE so acting and training evaluate the policy identically:
+    x_I = sqrt(lbar_I) latent + sqrt(1-lbar_I) eps.  The reverse chain
+    amplifies by 1/sqrt(lbar_I), so the prior enters the output at unit
+    scale while fresh noise keeps decisions exploratory.
+
+    s (..., S), x_latent (..., A) -> (x0, probs) with matching batch dims.
+    """
+    sched = make_schedule(cfg.diffusion.num_steps, cfg.diffusion.beta_min,
+                          cfg.diffusion.beta_max)
+    eps_fn = lambda x, i, ss: nets.apply_ladn(theta, x, i, ss)  # noqa: E731
+    lbar = sched.lambda_bars[-1]
+
+    def chain(xl, si, k):
+        k_noise, k_chain = jax.random.split(k)
+        eps0 = jax.random.normal(k_noise, xl.shape)
+        if cfg.diffusion.latent_init:
+            x_I = jnp.sqrt(lbar) * xl + jnp.sqrt(1 - lbar) * eps0
+        else:
+            x_I = eps0                      # D2SAC: pure Gaussian start
+        return run_reverse_chain(sched, eps_fn, x_I, si, k_chain,
+                                 cfg.diffusion.paper_variance)
+
+    if x_latent.ndim == 1:
+        return chain(x_latent, s, key)
+    keys = jax.random.split(key, x_latent.shape[0])
+    return jax.vmap(chain)(x_latent, s, keys)
+
+
+def ladts_act(state: LadtsState, cfg: AgentConfig, s, n, key,
+              greedy: bool = False) -> Tuple[jnp.ndarray, LadtsState]:
+    """One decision for task slot ``n``.  s (S,) -> action () int32.
+
+    Training-time actions are sampled from pi (Fig. 4's sampling unit) —
+    pure Eqn-(8) argmax plus the latent store's self-reinforcement
+    collapses every scheduler onto one ES and queues explode (observed
+    empirically; see DESIGN.md §Deviations).  Evaluation uses argmax.
+    """
+    k_chain, k_samp = jax.random.split(key)
+    x0, probs = _policy_probs(state.theta_act, cfg, s, state.X[n], k_chain)
+    logp = jnp.log(jnp.clip(probs, 1e-8))
+    a_greedy = jnp.argmax(probs, axis=-1).astype(jnp.int32)   # Eqn (8)
+    a_sample = jax.random.categorical(k_samp, logp).astype(jnp.int32)
+    a = jnp.where(greedy, a_greedy, a_sample)
+    # Latent update: store the standardized x_0.  Raw x_0 compounds
+    # exponentially across reuse (the reverse chain expands its input by
+    # ~1/sqrt(lbar_I) ~ 12x at I=5) and saturates the policy; softmax(x_0)
+    # over-flattens it.  Z-scoring preserves the action preference shape
+    # at the N(0,1) scale the chain was initialised for (DESIGN.md
+    # §Deviations).
+    x0n = (x0 - x0.mean(-1, keepdims=True)) / (x0.std(-1, keepdims=True)
+                                               + 1e-6)
+    X = state.X.at[n].set(x0n)
+    return a, state._replace(X=X)
+
+
+def ladts_latent(state: LadtsState, n) -> jnp.ndarray:
+    return state.X[n]
+
+
+def ladts_update(state: LadtsState, cfg: AgentConfig, key
+                 ) -> Tuple[LadtsState, dict]:
+    k_samp, k_pi, k_pi_next, k_pi_actor = jax.random.split(key, 4)
+    batch: Transition = replay_sample(state.replay, k_samp, cfg.batch_size)
+    alpha = jnp.exp(state.log_alpha)
+    gamma = cfg.gamma
+
+    # --- target Q (Eqn after (13); discrete soft expectation form) --------
+    _, probs_next = _policy_probs(state.theta, cfg, batch.s_next,
+                                  batch.x_next, k_pi_next)
+    logp_next = jnp.log(jnp.clip(probs_next, 1e-8))
+    q1n = nets.apply_critic(state.t1, batch.s_next)
+    q2n = nets.apply_critic(state.t2, batch.s_next)
+    qn = jnp.minimum(q1n, q2n)
+    h_next = -(probs_next * logp_next).sum(-1)
+    v_next = (probs_next * qn).sum(-1) + alpha * h_next
+    q_target = batch.r + gamma * v_next                   # (K,)
+    q_target = jax.lax.stop_gradient(q_target)
+
+    # --- critic update (Eqn 14) -------------------------------------------
+    def critic_loss(cp):
+        q = nets.apply_critic(cp, batch.s)
+        qa = jnp.take_along_axis(q, batch.a[:, None], axis=1)[:, 0]
+        return jnp.mean((qa - q_target) ** 2)
+
+    lc1, g1 = jax.value_and_grad(critic_loss)(state.c1)
+    lc2, g2 = jax.value_and_grad(critic_loss)(state.c2)
+    c1, opt_c1 = adam_update(state.c1, g1, state.opt_c1, cfg.lr_critic)
+    c2, opt_c2 = adam_update(state.c2, g2, state.opt_c2, cfg.lr_critic)
+
+    # --- actor update (Eqn 15, standard discrete-SAC form; see DESIGN.md
+    # §Deviations for the paper's squared variant) --------------------------
+    q1e = nets.apply_critic(c1, batch.s)
+    q2e = nets.apply_critic(c2, batch.s)
+    q_eval = jax.lax.stop_gradient(jnp.minimum(q1e, q2e))
+
+    def actor_loss(th):
+        _, probs = _policy_probs(th, cfg, batch.s, batch.x, k_pi_actor)
+        logp = jnp.log(jnp.clip(probs, 1e-8))
+        return jnp.mean((probs * (alpha * logp - q_eval)).sum(-1))
+
+    la, gth = jax.value_and_grad(actor_loss)(state.theta)
+    theta, opt_theta = adam_update(state.theta, gth, state.opt_theta,
+                                   cfg.lr_actor)
+
+    # --- temperature update (Eqn 16) ---------------------------------------
+    _, probs_now = _policy_probs(theta, cfg, batch.s, batch.x, k_pi)
+    h_now = -(probs_now * jnp.log(jnp.clip(probs_now, 1e-8))).sum(-1).mean()
+    h_now = jax.lax.stop_gradient(h_now)
+
+    def alpha_loss(log_a):
+        return jnp.exp(log_a) * (h_now - cfg.target_entropy)
+
+    lal, ga = jax.value_and_grad(alpha_loss)(state.log_alpha)
+    log_alpha, opt_alpha = adam_update(state.log_alpha, ga,
+                                       state.opt_alpha, cfg.lr_alpha)
+
+    # --- soft target update (Eqn 17) + s-LADN refresh ----------------------
+    soft = lambda t, c: jax.tree_util.tree_map(  # noqa: E731
+        lambda a, b: (1 - cfg.tau) * a + cfg.tau * b, t, c)
+    new = state._replace(
+        theta=theta, theta_act=theta, c1=c1, c2=c2,
+        t1=soft(state.t1, c1), t2=soft(state.t2, c2),
+        log_alpha=log_alpha, opt_theta=opt_theta, opt_c1=opt_c1,
+        opt_c2=opt_c2, opt_alpha=opt_alpha, steps=state.steps + 1)
+    metrics = {"critic_loss": (lc1 + lc2) / 2, "actor_loss": la,
+               "alpha": jnp.exp(log_alpha), "entropy": h_now}
+    return new, metrics
+
+
+# ===========================================================================
+# SAC-TS baseline: categorical MLP actor, same critic machinery
+# ===========================================================================
+
+
+class SacState(NamedTuple):
+    actor: Any
+    c1: Any
+    c2: Any
+    t1: Any
+    t2: Any
+    log_alpha: jnp.ndarray
+    opt_actor: AdamState
+    opt_c1: AdamState
+    opt_c2: AdamState
+    opt_alpha: AdamState
+    replay: ReplayState
+    steps: jnp.ndarray
+
+
+def sac_init(key, cfg: AgentConfig, state_dim: int, action_dim: int,
+             n_max: int) -> SacState:
+    ks = jax.random.split(key, 3)
+    actor = nets.init_mlp(ks[0], (state_dim, *cfg.hidden, action_dim))
+    c1 = nets.init_critic(ks[1], state_dim, action_dim, cfg.hidden)
+    c2 = nets.init_critic(ks[2], state_dim, action_dim, cfg.hidden)
+    return SacState(
+        actor=actor, c1=c1, c2=c2,
+        t1=jax.tree_util.tree_map(lambda x: x, c1),
+        t2=jax.tree_util.tree_map(lambda x: x, c2),
+        log_alpha=jnp.log(jnp.asarray(cfg.init_alpha)),
+        opt_actor=adam_init(actor), opt_c1=adam_init(c1),
+        opt_c2=adam_init(c2), opt_alpha=adam_init(jnp.zeros(())),
+        replay=replay_init(cfg.replay_capacity,
+                           transition_spec(state_dim, action_dim)),
+        steps=jnp.zeros((), jnp.int32),
+    )
+
+
+def sac_act(state: SacState, cfg: AgentConfig, s, key,
+            greedy: bool = False) -> jnp.ndarray:
+    logits = nets.apply_mlp(state.actor, s)
+    a_s = jax.random.categorical(key, logits).astype(jnp.int32)
+    return jnp.where(greedy, jnp.argmax(logits, -1).astype(jnp.int32), a_s)
+
+
+def sac_update(state: SacState, cfg: AgentConfig, key
+               ) -> Tuple[SacState, dict]:
+    k_samp, _ = jax.random.split(key)
+    batch: Transition = replay_sample(state.replay, k_samp, cfg.batch_size)
+    alpha = jnp.exp(state.log_alpha)
+
+    probs_next = jax.nn.softmax(nets.apply_mlp(state.actor, batch.s_next))
+    logp_next = jnp.log(jnp.clip(probs_next, 1e-8))
+    qn = jnp.minimum(nets.apply_critic(state.t1, batch.s_next),
+                     nets.apply_critic(state.t2, batch.s_next))
+    v_next = (probs_next * (qn - alpha * logp_next)).sum(-1)
+    q_target = jax.lax.stop_gradient(batch.r + cfg.gamma * v_next)
+
+    def critic_loss(cp):
+        qa = jnp.take_along_axis(nets.apply_critic(cp, batch.s),
+                                 batch.a[:, None], axis=1)[:, 0]
+        return jnp.mean((qa - q_target) ** 2)
+
+    lc1, g1 = jax.value_and_grad(critic_loss)(state.c1)
+    lc2, g2 = jax.value_and_grad(critic_loss)(state.c2)
+    c1, opt_c1 = adam_update(state.c1, g1, state.opt_c1, cfg.lr_critic)
+    c2, opt_c2 = adam_update(state.c2, g2, state.opt_c2, cfg.lr_critic)
+
+    q_eval = jax.lax.stop_gradient(
+        jnp.minimum(nets.apply_critic(c1, batch.s),
+                    nets.apply_critic(c2, batch.s)))
+
+    def actor_loss(ap):
+        probs = jax.nn.softmax(nets.apply_mlp(ap, batch.s))
+        logp = jnp.log(jnp.clip(probs, 1e-8))
+        return jnp.mean((probs * (alpha * logp - q_eval)).sum(-1))
+
+    la, ga_ = jax.value_and_grad(actor_loss)(state.actor)
+    actor, opt_actor = adam_update(state.actor, ga_, state.opt_actor,
+                                   cfg.lr_actor)
+
+    probs_now = jax.nn.softmax(nets.apply_mlp(actor, batch.s))
+    h_now = -(probs_now
+              * jnp.log(jnp.clip(probs_now, 1e-8))).sum(-1).mean()
+
+    def alpha_loss(log_a):
+        return jnp.exp(log_a) * (jax.lax.stop_gradient(h_now)
+                                 - cfg.target_entropy)
+
+    _, gal = jax.value_and_grad(alpha_loss)(state.log_alpha)
+    log_alpha, opt_alpha = adam_update(state.log_alpha, gal,
+                                       state.opt_alpha, cfg.lr_alpha)
+
+    soft = lambda t, c: jax.tree_util.tree_map(  # noqa: E731
+        lambda a, b: (1 - cfg.tau) * a + cfg.tau * b, t, c)
+    new = state._replace(actor=actor, c1=c1, c2=c2, t1=soft(state.t1, c1),
+                         t2=soft(state.t2, c2), log_alpha=log_alpha,
+                         opt_actor=opt_actor, opt_c1=opt_c1, opt_c2=opt_c2,
+                         opt_alpha=opt_alpha, steps=state.steps + 1)
+    return new, {"critic_loss": (lc1 + lc2) / 2, "actor_loss": la,
+                 "alpha": jnp.exp(log_alpha), "entropy": h_now}
+
+
+# ===========================================================================
+# DQN-TS baseline
+# ===========================================================================
+
+
+class DqnState(NamedTuple):
+    q: Any
+    q_target: Any
+    opt: AdamState
+    replay: ReplayState
+    steps: jnp.ndarray
+
+
+def dqn_init(key, cfg: AgentConfig, state_dim: int, action_dim: int,
+             n_max: int) -> DqnState:
+    q = nets.init_critic(key, state_dim, action_dim, cfg.hidden)
+    return DqnState(q=q, q_target=jax.tree_util.tree_map(lambda x: x, q),
+                    opt=adam_init(q),
+                    replay=replay_init(cfg.replay_capacity,
+                                       transition_spec(state_dim,
+                                                       action_dim)),
+                    steps=jnp.zeros((), jnp.int32))
+
+
+def dqn_act(state: DqnState, cfg: AgentConfig, s, key,
+            greedy: bool = False) -> jnp.ndarray:
+    qv = nets.apply_critic(state.q, s)
+    eps = cfg.eps_end + (cfg.eps_start - cfg.eps_end) * jnp.exp(
+        -state.steps.astype(jnp.float32) / cfg.eps_decay_steps)
+    eps = jnp.where(greedy, 0.0, eps)
+    k1, k2 = jax.random.split(key)
+    rand_a = jax.random.randint(k1, (), 0, qv.shape[-1])
+    best = jnp.argmax(qv, axis=-1)
+    return jnp.where(jax.random.uniform(k2) < eps, rand_a,
+                     best).astype(jnp.int32)
+
+
+def dqn_update(state: DqnState, cfg: AgentConfig, key
+               ) -> Tuple[DqnState, dict]:
+    batch: Transition = replay_sample(state.replay, key, cfg.batch_size)
+    qn = nets.apply_critic(state.q_target, batch.s_next).max(-1)
+    tgt = jax.lax.stop_gradient(batch.r + cfg.gamma * qn)
+
+    def loss(qp):
+        qa = jnp.take_along_axis(nets.apply_critic(qp, batch.s),
+                                 batch.a[:, None], axis=1)[:, 0]
+        return jnp.mean((qa - tgt) ** 2)
+
+    lv, g = jax.value_and_grad(loss)(state.q)
+    q, opt = adam_update(state.q, g, state.opt, cfg.lr_critic)
+    soft = jax.tree_util.tree_map(
+        lambda a, b: (1 - cfg.tau) * a + cfg.tau * b, state.q_target, q)
+    return state._replace(q=q, q_target=soft, opt=opt,
+                          steps=state.steps + 1), {"critic_loss": lv}

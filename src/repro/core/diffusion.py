@@ -1,0 +1,125 @@
+"""Latent-action diffusion machinery (paper §IV-A, Theorem 2).
+
+Forward-process variance schedule (VP-SDE discretisation, as in the paper):
+
+    beta_i = 1 - exp(-beta_min/I - (2i-1)/(2I^2) (beta_max - beta_min))
+
+Reverse update (Eqn 10), i = I..1:
+
+    x_{i-1} = (x_i - beta_i/sqrt(1-lambda_bar_i) * eps_theta(x_i,i,s))
+              / sqrt(lambda_i)  +  (beta_tilde_i/2) * eps
+
+The paper uses the (beta_tilde_i / 2) * eps noise term verbatim; standard
+DDPM samples with sqrt(beta_tilde_i) * eps — both are provided
+(``paper_variance`` flag, default True for faithfulness).
+
+The *latent action* strategy replaces the x_I ~ N(0, I) initialisation of
+the reverse chain with the previous x_0 for the same (BS, task-slot) pair
+(stored in the X_b array), which is the paper's key accelerator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DiffusionSchedule(NamedTuple):
+    betas: jnp.ndarray          # (I,) beta_1..beta_I  (index 0 = i=1)
+    lambdas: jnp.ndarray        # 1 - beta
+    lambda_bars: jnp.ndarray    # cumprod lambda
+    beta_tildes: jnp.ndarray    # posterior variances
+
+    @property
+    def num_steps(self) -> int:
+        return self.betas.shape[0]
+
+
+def make_schedule(num_steps: int, beta_min: float = 0.1,
+                  beta_max: float = 10.0) -> DiffusionSchedule:
+    i = jnp.arange(1, num_steps + 1, dtype=jnp.float32)
+    I = float(num_steps)  # noqa: E741
+    betas = 1.0 - jnp.exp(-beta_min / I
+                          - (2 * i - 1) / (2 * I * I) * (beta_max - beta_min))
+    lambdas = 1.0 - betas
+    lambda_bars = jnp.cumprod(lambdas)
+    prev_bars = jnp.concatenate([jnp.ones((1,)), lambda_bars[:-1]])
+    beta_tildes = (1.0 - prev_bars) / (1.0 - lambda_bars) * betas
+    return DiffusionSchedule(betas, lambdas, lambda_bars, beta_tildes)
+
+
+def make_schedule_np(num_steps: int, beta_min: float = 0.1,
+                     beta_max: float = 10.0) -> DiffusionSchedule:
+    """Numpy twin of make_schedule — safe to evaluate at jit-trace time
+    (the Pallas kernel folds the constants into immediates)."""
+    import numpy as np
+    i = np.arange(1, num_steps + 1, dtype=np.float32)
+    I = float(num_steps)  # noqa: E741
+    betas = 1.0 - np.exp(-beta_min / I
+                         - (2 * i - 1) / (2 * I * I) * (beta_max - beta_min))
+    lambdas = 1.0 - betas
+    lambda_bars = np.cumprod(lambdas)
+    prev_bars = np.concatenate([np.ones((1,), np.float32),
+                                lambda_bars[:-1]])
+    beta_tildes = (1.0 - prev_bars) / (1.0 - lambda_bars) * betas
+    return DiffusionSchedule(betas, lambdas, lambda_bars, beta_tildes)
+
+
+def forward_sample(sched: DiffusionSchedule, x0, i, eps):
+    """Eqn (11): x_i = sqrt(lambda_bar_i) x_0 + sqrt(1-lambda_bar_i) eps.
+
+    ``i`` is 1-based (array index i-1)."""
+    lb = sched.lambda_bars[i - 1]
+    return jnp.sqrt(lb) * x0 + jnp.sqrt(1.0 - lb) * eps
+
+
+def reverse_step(sched: DiffusionSchedule, eps_pred, x_i, i, noise,
+                 paper_variance: bool = True):
+    """One Eqn-(10) update from x_i to x_{i-1}; ``i`` is 1-based."""
+    idx = i - 1
+    beta = sched.betas[idx]
+    lam = sched.lambdas[idx]
+    lbar = sched.lambda_bars[idx]
+    btilde = sched.beta_tildes[idx]
+    mean = (x_i - beta / jnp.sqrt(1.0 - lbar) * eps_pred) / jnp.sqrt(lam)
+    if paper_variance:
+        scale = btilde / 2.0
+    else:
+        scale = jnp.sqrt(btilde)
+    # no noise on the final (i=1) step, as in DDPM sampling
+    scale = jnp.where(i > 1, scale, 0.0)
+    return mean + scale * noise
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffusionPolicyConfig:
+    num_steps: int = 5            # I (paper Table IV)
+    beta_min: float = 0.1
+    beta_max: float = 10.0
+    paper_variance: bool = True
+    latent_init: bool = True      # False -> D2SAC (Gaussian-noise init)
+
+
+def run_reverse_chain(sched: DiffusionSchedule, eps_fn, x_I, s, key,
+                      paper_variance: bool = True) -> Tuple[jnp.ndarray,
+                                                            jnp.ndarray]:
+    """Full reverse chain.  ``eps_fn(x, i, s) -> eps`` is the LADN.
+
+    Returns (x_0, action probabilities softmax(x_0)).
+    Differentiable end-to-end (reparameterised noise).
+    """
+    I = sched.num_steps  # noqa: E741
+    noises = jax.random.normal(key, (I,) + x_I.shape)
+
+    def body(x, step):
+        i = I - step                      # I, I-1, ..., 1
+        eps_pred = eps_fn(x, i, s)
+        x_next = reverse_step(sched, eps_pred, x, i, noises[step],
+                              paper_variance=paper_variance)
+        return x_next, None
+
+    x0, _ = jax.lax.scan(body, x_I, jnp.arange(I))
+    probs = jax.nn.softmax(x0, axis=-1)
+    return x0, probs

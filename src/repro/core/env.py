@@ -1,0 +1,183 @@
+"""AIGC edge-offloading environment (paper §III, Eqns (1)-(9)).
+
+System model: B base stations, each with an edge server running an AIGC
+service.  At each time slot t, N_{b,t} AIGC tasks arrive at BS b; a
+scheduler assigns each task to an ES b'.  The service delay of a task
+(Eqn 2) is
+
+    T = d_n / v_up  +  rho_n * z_n / f_b'  +  T_wait  +  d~_n / v_down
+    T_wait = (q_{t-1,b'} + q_bef) / f_b'                       (Eqn 3)
+
+and per-ES queues evolve by Eqn (4):
+
+    q_t,b' = max(q_{t-1,b'} + sum workloads placed on b' - f_b' * Delta, 0)
+
+AIGC task model: the workload is rho_n * z_n where z_n is the number of
+denoising steps demanded (image-quality proxy) and rho_n the cycles per
+step — workload depends on model complexity, not input size (paper's
+"first challenge").
+
+The environment is fully vectorised JAX: an episode is one (T x N_max x B)
+scan; within a slot, the n-th tasks of all B stations are decided
+simultaneously against the queue state accumulated from tasks 1..n-1 (the
+paper's per-BS parallel / per-task sequential semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvParams:
+    """Defaults follow Table III of the paper."""
+
+    num_bs: int = 20                 # B
+    num_slots: int = 60              # |T|
+    slot_seconds: float = 1.0        # Delta
+    max_tasks: int = 50              # N_{b,t} ~ U[1, max_tasks]
+    min_tasks: int = 1
+    # task data size d_n in Mbits ~ U[2, 5]; result size d~_n ~ U[0.6, 1.0]
+    d_range: Tuple[float, float] = (2.0, 5.0)
+    d_out_range: Tuple[float, float] = (0.6, 1.0)
+    # quality demand z_n (denoising steps) ~ U[1, 15]
+    z_range: Tuple[float, float] = (1.0, 15.0)
+    # computing density rho_n in cycles/step, scaled so workloads are in
+    # Gcycles: U[100, 300] cycles/bit-step against Mbit-scale tasks ->
+    # rho*z in [0.1, 4.5] Gcycles per task (paper's units).
+    rho_range: Tuple[float, float] = (0.1, 0.3)
+    # transmission rate v in Mbit/s ~ U[400, 500]
+    v_range: Tuple[float, float] = (400.0, 500.0)
+    # ES capacity f_b' in Gcycles/s ~ U[10, 50] GHz
+    f_range: Tuple[float, float] = (10.0, 50.0)
+    # The paper motivates the latent store by tasks having "a specific
+    # periodic pattern over a certain period": 0.0 = fully iid tasks,
+    # 1.0 = task slot n always carries the same (d, z, rho) demand.
+    task_periodicity: float = 0.0
+
+    @property
+    def state_dim(self) -> int:
+        # s = [d_n, rho_n * z_n, q_{t-1,1..B}]  (Eqn 6)
+        return 2 + self.num_bs
+
+    @property
+    def action_dim(self) -> int:
+        return self.num_bs
+
+
+class EpisodeData(NamedTuple):
+    """Pre-sampled randomness for one episode (shapes lead with T, N, B)."""
+
+    d: jnp.ndarray        # (T, N, B) input Mbits
+    d_out: jnp.ndarray    # (T, N, B) result Mbits
+    z: jnp.ndarray        # (T, N, B) denoising steps
+    rho: jnp.ndarray      # (T, N, B) Gcycles per step
+    v_up: jnp.ndarray     # (T, N, B) Mbit/s
+    v_down: jnp.ndarray   # (T, N, B) Mbit/s
+    mask: jnp.ndarray     # (T, N, B) task exists
+    f: jnp.ndarray        # (B,) ES capacity Gcycles/s
+
+
+def sample_capacities(key, p: EnvParams) -> jnp.ndarray:
+    """Per-ES compute capacities — hardware, so sampled ONCE per
+    environment instance and held fixed across episodes ('reset system
+    environment' in Algorithm 1 resets queues, not the cluster)."""
+    return jax.random.uniform(key, (p.num_bs,), jnp.float32, *p.f_range)
+
+
+def sample_episode(key, p: EnvParams, f=None) -> EpisodeData:
+    ks = jax.random.split(key, 12)
+    shape = (p.num_slots, p.max_tasks, p.num_bs)
+
+    def u(k, lo, hi, s=shape):
+        return jax.random.uniform(k, s, jnp.float32, lo, hi)
+
+    def periodic(k_base, k_iid, lo, hi):
+        """Blend a per-(task-slot, BS) base demand with iid noise."""
+        iid = u(k_iid, lo, hi)
+        if p.task_periodicity <= 0.0:
+            return iid
+        base = jax.random.uniform(k_base, (1, p.max_tasks, p.num_bs),
+                                  jnp.float32, lo, hi)
+        w = p.task_periodicity
+        return w * jnp.broadcast_to(base, shape) + (1 - w) * iid
+
+    n_tasks = jax.random.randint(ks[0], (p.num_slots, p.num_bs),
+                                 p.min_tasks, p.max_tasks + 1)
+    mask = (jnp.arange(p.max_tasks)[None, :, None]
+            < n_tasks[:, None, :]).astype(jnp.float32)
+    return EpisodeData(
+        d=periodic(ks[8], ks[1], *p.d_range),
+        d_out=u(ks[2], *p.d_out_range),
+        z=jnp.round(periodic(ks[9], ks[3], *p.z_range)),
+        rho=periodic(ks[10], ks[4], *p.rho_range),
+        v_up=u(ks[5], *p.v_range),
+        v_down=u(ks[6], *p.v_range),
+        mask=mask,
+        f=f if f is not None else sample_capacities(ks[7], p),
+    )
+
+
+class QueueState(NamedTuple):
+    q_prev: jnp.ndarray   # (B,) queue length at end of slot t-1 (Gcycles)
+    q_bef: jnp.ndarray    # (B,) workload placed on each ES so far in slot t
+
+
+def init_queues(p: EnvParams) -> QueueState:
+    z = jnp.zeros((p.num_bs,), jnp.float32)
+    return QueueState(q_prev=z, q_bef=z)
+
+
+def observe(p: EnvParams, qs: QueueState, d, workload) -> jnp.ndarray:
+    """Per-task state vector (Eqn 6), vectorised over the B stations.
+
+    d, workload: (B,) — the n-th task of each BS.  Returns (B, state_dim).
+    """
+    qrep = jnp.broadcast_to(qs.q_prev[None, :], (p.num_bs, p.num_bs))
+    return jnp.concatenate([d[:, None], workload[:, None], qrep], axis=1)
+
+
+def task_delays(p: EnvParams, ep: EpisodeData, qs: QueueState, t, n,
+                actions: jnp.ndarray) -> jnp.ndarray:
+    """Service delay (Eqn 2) of the n-th task of every BS given one-hot-
+    index actions (B,) in [0, B).  Returns (B,) delays in seconds."""
+    d = ep.d[t, n]                    # (B,)
+    z = ep.z[t, n]
+    rho = ep.rho[t, n]
+    d_out = ep.d_out[t, n]
+    v_up = ep.v_up[t, n]
+    v_down = ep.v_down[t, n]
+    f_tgt = ep.f[actions]             # (B,)
+    workload = rho * z                # Gcycles
+    t_tx = d / v_up + d_out / v_down
+    t_comp = workload / f_tgt
+    t_wait = (qs.q_prev[actions] + qs.q_bef[actions]) / f_tgt   # Eqn (3)
+    return t_tx + t_comp + t_wait
+
+
+def apply_actions(p: EnvParams, ep: EpisodeData, qs: QueueState, t, n,
+                  actions: jnp.ndarray) -> QueueState:
+    """Accumulate the placed workloads into the in-slot queue."""
+    workload = ep.rho[t, n] * ep.z[t, n] * ep.mask[t, n]       # (B,)
+    placed = jnp.zeros((p.num_bs,), jnp.float32).at[actions].add(workload)
+    return QueueState(q_prev=qs.q_prev, q_bef=qs.q_bef + placed)
+
+
+def end_slot(p: EnvParams, ep: EpisodeData, qs: QueueState) -> QueueState:
+    """Queue update at slot end (Eqn 4)."""
+    q = jnp.maximum(qs.q_prev + qs.q_bef - ep.f * p.slot_seconds, 0.0)
+    return QueueState(q_prev=q, q_bef=jnp.zeros_like(qs.q_bef))
+
+
+def state_scale(p: EnvParams) -> jnp.ndarray:
+    """Feature normalisation for the networks (keeps inputs O(1))."""
+    d_hi = p.d_range[1]
+    w_hi = p.rho_range[1] * p.z_range[1]
+    q_hi = p.rho_range[1] * p.z_range[1] * p.max_tasks  # rough slot load
+    return jnp.concatenate([
+        jnp.array([d_hi, w_hi], jnp.float32),
+        jnp.full((p.num_bs,), q_hi, jnp.float32),
+    ])

@@ -1,0 +1,82 @@
+"""Networks for LAD-TS and baselines (paper §IV-A, Fig. 4).
+
+All tiny MLPs (paper Table IV: two hidden layers of 20 units) built
+functionally so they vmap cleanly over the B per-ES agents.
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+TIME_EMBED_DIM = 16
+
+
+def _linear_init(key, nin, nout):
+    lim = 1.0 / math.sqrt(nin)
+    kw, kb = jax.random.split(key)
+    return {
+        "w": jax.random.uniform(kw, (nin, nout), jnp.float32, -lim, lim),
+        "b": jax.random.uniform(kb, (nout,), jnp.float32, -lim, lim),
+    }
+
+
+def init_mlp(key, dims: Sequence[int]) -> list:
+    keys = jax.random.split(key, len(dims) - 1)
+    return [_linear_init(k, dims[i], dims[i + 1])
+            for i, k in enumerate(keys)]
+
+
+def apply_mlp(params: list, x: jnp.ndarray, final_act=None) -> jnp.ndarray:
+    h = x
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i + 1 < len(params):
+            h = jax.nn.relu(h)
+        elif final_act is not None:
+            h = final_act(h)
+    return h
+
+
+def timestep_embed(i, dim: int = TIME_EMBED_DIM) -> jnp.ndarray:
+    """Sinusoidal encoding of the denoising step index (Fig. 4)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(100.0) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = jnp.asarray(i, jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# LADN: eps_theta(x_i, i, s)
+# ---------------------------------------------------------------------------
+
+
+def init_ladn(key, state_dim: int, action_dim: int,
+              hidden: Tuple[int, ...] = (20, 20)) -> list:
+    nin = action_dim + TIME_EMBED_DIM + state_dim
+    return init_mlp(key, (nin, *hidden, action_dim))
+
+
+def apply_ladn(params: list, x, i, s) -> jnp.ndarray:
+    """x (..., A), i scalar (or (...,)), s (..., S) -> eps (..., A)."""
+    t = timestep_embed(i)
+    t = jnp.broadcast_to(t, x.shape[:-1] + (TIME_EMBED_DIM,))
+    inp = jnp.concatenate([x, t, s], axis=-1)
+    return apply_mlp(params, inp)
+
+
+# ---------------------------------------------------------------------------
+# Critic: Q(s) -> R^A (discrete-action double critic)
+# ---------------------------------------------------------------------------
+
+
+def init_critic(key, state_dim: int, action_dim: int,
+                hidden: Tuple[int, ...] = (20, 20)) -> list:
+    return init_mlp(key, (state_dim, *hidden, action_dim))
+
+
+def apply_critic(params: list, s) -> jnp.ndarray:
+    return apply_mlp(params, s)

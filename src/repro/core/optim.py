@@ -1,0 +1,35 @@
+"""Small functional Adam for the RL networks (paper uses Adam, Table IV)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adam_init(params) -> AdamState:
+    z = lambda t: jax.tree_util.tree_map(jnp.zeros_like, t)  # noqa: E731
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=z(params),
+                     nu=z(params))
+
+
+def adam_update(params, grads, state: AdamState, lr: float,
+                b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                state.mu, grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                state.nu, grads)
+    b1c = 1 - b1 ** t
+    b2c = 1 - b2 ** t
+    new_params = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (m / b1c) / (jnp.sqrt(v / b2c) + eps),
+        params, mu, nu)
+    return new_params, AdamState(step=step, mu=mu, nu=nu)

@@ -1,0 +1,50 @@
+"""Fixed-capacity circular experience pool (paper: |R| = 1000), functional
+and vmap-friendly (one pool per ES agent)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ReplayState(NamedTuple):
+    data: Any              # pytree of (capacity, ...) arrays
+    ptr: jnp.ndarray       # () int32 next write slot
+    size: jnp.ndarray      # () int32 number of valid entries
+
+
+def replay_init(capacity: int, item_spec) -> ReplayState:
+    data = jax.tree_util.tree_map(
+        lambda s: jnp.zeros((capacity,) + tuple(s.shape), s.dtype),
+        item_spec)
+    return ReplayState(data=data, ptr=jnp.zeros((), jnp.int32),
+                       size=jnp.zeros((), jnp.int32))
+
+
+def replay_add(state: ReplayState, item, valid) -> ReplayState:
+    """Append ``item`` if ``valid`` (a traced bool), else no-op."""
+    cap = jax.tree_util.tree_leaves(state.data)[0].shape[0]
+    valid = jnp.asarray(valid)
+
+    def write(buf, x):
+        cur = buf[state.ptr]
+        newv = jnp.where(
+            valid.reshape((-1,) + (1,) * (x.ndim))[0]
+            if x.ndim else valid, x, cur)
+        return buf.at[state.ptr].set(newv)
+
+    data = jax.tree_util.tree_map(write, state.data, item)
+    inc = valid.astype(jnp.int32)
+    return ReplayState(
+        data=data,
+        ptr=(state.ptr + inc) % cap,
+        size=jnp.minimum(state.size + inc, cap),
+    )
+
+
+def replay_sample(state: ReplayState, key, batch: int):
+    """Uniform sample of ``batch`` items from the valid prefix."""
+    hi = jnp.maximum(state.size, 1)
+    idx = jax.random.randint(key, (batch,), 0, hi)
+    return jax.tree_util.tree_map(lambda buf: buf[idx], state.data)

@@ -1,0 +1,263 @@
+"""Online distributed training harness (Algorithm 1).
+
+One jitted function rolls an entire episode: scan over the T time slots,
+inner scan over the N_max task slots.  At each (t, n) the B per-ES agents
+decide in parallel (vmap over stacked agent states — the paper's
+"for all BS b in parallel"); queues couple them globally via Eqn (4).
+
+Transitions are emitted one step late (s_next is observed at the next
+(t, n)), stored in each agent's pool, and — once |R| > 300 — every step
+triggers one SAC update per agent (Algorithm 1 lines 15-18).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import agents as ag
+from repro.core import env as envlib
+
+METHODS = ("lad-ts", "d2sac-ts", "sac-ts", "dqn-ts", "opt-ts", "random-ts",
+           "local-ts")
+LEARNED = ("lad-ts", "d2sac-ts", "sac-ts", "dqn-ts")
+
+
+def make_agent_fns(method: str, cfg: ag.AgentConfig):
+    """(init, act, update, add_replay, latent) for a method, all vmappable.
+
+    act(state, s, n, key) -> (action, x_used, new_state)
+    """
+    if method in ("lad-ts", "d2sac-ts"):
+        dcfg = dataclasses.replace(cfg.diffusion,
+                                   latent_init=(method == "lad-ts"))
+        cfg = dataclasses.replace(cfg, diffusion=dcfg)
+
+        def init(key, sd, adim, nmax):
+            return ag.ladts_init(key, cfg, sd, adim, nmax)
+
+        def act(state, s, n, key, greedy=False):
+            x_used = (state.X[n] if cfg.diffusion.latent_init
+                      else jax.random.normal(jax.random.fold_in(key, 7),
+                                             state.X[0].shape))
+            a, state = ag.ladts_act(state, cfg, s, n, key, greedy=greedy)
+            return a, x_used, state
+
+        def update(state, key):
+            return ag.ladts_update(state, cfg, key)
+
+        def latent(state, n):
+            return state.X[n]
+
+    elif method == "sac-ts":
+        def init(key, sd, adim, nmax):
+            return ag.sac_init(key, cfg, sd, adim, nmax)
+
+        def act(state, s, n, key, greedy=False):
+            a = ag.sac_act(state, cfg, s, key, greedy=greedy)
+            return a, jnp.zeros((state.c1[-1]["b"].shape[0],)), state
+
+        def update(state, key):
+            return ag.sac_update(state, cfg, key)
+
+        def latent(state, n):
+            return jnp.zeros((state.c1[-1]["b"].shape[0],))
+
+    elif method == "dqn-ts":
+        def init(key, sd, adim, nmax):
+            return ag.dqn_init(key, cfg, sd, adim, nmax)
+
+        def act(state, s, n, key, greedy=False):
+            a = ag.dqn_act(state, cfg, s, key, greedy=greedy)
+            return a, jnp.zeros((state.q[-1]["b"].shape[0],)), state
+
+        def update(state, key):
+            return ag.dqn_update(state, cfg, key)
+
+        def latent(state, n):
+            return jnp.zeros((state.q[-1]["b"].shape[0],))
+
+    else:
+        raise ValueError(method)
+
+    def add_replay(state, item, valid):
+        return state._replace(replay=ag.replay_add(state.replay, item,
+                                                   valid))
+
+    return init, act, update, add_replay, latent
+
+
+class Pending(NamedTuple):
+    """Previous step's half-built transitions (B, ...)."""
+    s: jnp.ndarray
+    x: jnp.ndarray
+    a: jnp.ndarray
+    r: jnp.ndarray
+    valid: jnp.ndarray
+
+
+def heuristic_actions(method: str, p: envlib.EnvParams, ep, qs, t, n, key):
+    """Non-learned schedulers (B,) actions."""
+    B = p.num_bs
+    if method == "random-ts":
+        return jax.random.randint(key, (B,), 0, B)
+    if method == "local-ts":
+        return jnp.arange(B)
+    # opt-ts: enumerate all B placements for each task; pick min T_serv.
+    # (B_src, B_tgt) delay matrix using the true capacities and queues.
+    d = ep.d[t, n][:, None]
+    z = ep.z[t, n][:, None]
+    rho = ep.rho[t, n][:, None]
+    d_out = ep.d_out[t, n][:, None]
+    v_up = ep.v_up[t, n][:, None]
+    v_down = ep.v_down[t, n][:, None]
+    f = ep.f[None, :]
+    wl = rho * z
+    delay = (d / v_up + d_out / v_down + wl / f
+             + (qs.q_prev + qs.q_bef)[None, :] / f)
+    return jnp.argmin(delay, axis=1).astype(jnp.int32)
+
+
+def build_episode_fn(method: str, p: envlib.EnvParams,
+                     cfg: ag.AgentConfig, train: bool = True) -> Callable:
+    """Returns jit-able episode(states, ep_data, key) ->
+    (states, avg_delay, metrics)."""
+    learned = method in LEARNED
+    if learned:
+        _, act, update, add_replay, latent = make_agent_fns(method, cfg)
+        vact = jax.vmap(act, in_axes=(0, 0, None, 0, None))
+        vupdate = jax.vmap(update, in_axes=(0, 0))
+        vadd = jax.vmap(add_replay, in_axes=(0, 0, 0))
+        vlatent = jax.vmap(latent, in_axes=(0, None))
+    scale = envlib.state_scale(p)
+
+    def episode(states, ep: envlib.EpisodeData, key):
+        qs0 = envlib.init_queues(p)
+        zB = jnp.zeros((p.num_bs,), jnp.float32)
+        pend0 = Pending(s=jnp.zeros((p.num_bs, p.state_dim)),
+                        x=jnp.zeros((p.num_bs, p.action_dim)),
+                        a=jnp.zeros((p.num_bs,), jnp.int32), r=zB,
+                        valid=jnp.zeros((p.num_bs,), bool))
+
+        def task_step(carry, tn):
+            states, qs, pend, key = carry
+            t, n = tn
+            key, k_act, k_upd = jax.random.split(key, 3)
+            d = ep.d[t, n]
+            workload = ep.rho[t, n] * ep.z[t, n]
+            mask = ep.mask[t, n] > 0
+            s = envlib.observe(p, qs, d, workload) / scale[None, :]
+
+            if learned:
+                x_next_lat = vlatent(states, n) if method == "lad-ts" else \
+                    jnp.zeros((p.num_bs, p.action_dim))
+                # complete the pending transition with s_next = s
+                trans = ag.Transition(s=pend.s, x=pend.x, a=pend.a,
+                                      r=pend.r, s_next=s, x_next=x_next_lat)
+                states = vadd(states, trans, pend.valid)
+                # NOTE: evaluation also samples from pi.  Greedy eval makes
+                # all B schedulers herd onto the same fast ES and queues
+                # explode (measured 0.3 -> 2.25s avg delay); the learned
+                # policy is a stochastic load balancer by construction.
+                keys = jax.random.split(k_act, p.num_bs)
+                actions, x_used, states = vact(states, s, n, keys, False)
+            else:
+                actions = heuristic_actions(method, p, ep, qs, t, n, k_act)
+                x_used = jnp.zeros((p.num_bs, p.action_dim))
+
+            actions = actions % p.num_bs
+            delays = envlib.task_delays(p, ep, qs, t, n, actions)
+            r = -delays * cfg.reward_scale                    # Eqn (9)
+            qs = envlib.apply_actions(p, ep, qs, t, n, actions)
+
+            if learned and train:
+                size = states.replay.size                     # (B,)
+                do_train = size > cfg.train_after
+
+                def trained(states):
+                    ukeys = jax.random.split(k_upd, p.num_bs)
+                    new, _ = vupdate(states, ukeys)
+                    return new
+
+                new_states = trained(states)
+                states = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(
+                        do_train.reshape((-1,) + (1,) * (a.ndim - 1))
+                        if a.ndim else do_train.any(), b, a),
+                    states, new_states)
+
+            pend = Pending(s=s, x=x_used, a=actions, r=r, valid=mask)
+            stats = (jnp.sum(delays * ep.mask[t, n]), jnp.sum(ep.mask[t, n]))
+            return (states, qs, pend, key), stats
+
+        def slot_step(carry, t):
+            states, qs, pend, key = carry
+            ns = jnp.arange(p.max_tasks)
+            (states, qs, pend, key), stats = jax.lax.scan(
+                task_step, (states, qs, pend, key),
+                (jnp.full_like(ns, t), ns))
+            qs = envlib.end_slot(p, ep, qs)
+            return (states, qs, pend, key), stats
+
+        (states, qs, pend, key), stats = jax.lax.scan(
+            slot_step, (states, qs0, pend0, key), jnp.arange(p.num_slots))
+        tot_delay = stats[0].sum()
+        tot_tasks = stats[1].sum()
+        return states, tot_delay / jnp.maximum(tot_tasks, 1.0)
+
+    return episode
+
+
+def init_agents(method: str, p: envlib.EnvParams, cfg: ag.AgentConfig,
+                key):
+    if method not in LEARNED:
+        return None
+    init, *_ = make_agent_fns(method, cfg)
+    keys = jax.random.split(key, p.num_bs)
+    return jax.vmap(lambda k: init(k, p.state_dim, p.action_dim,
+                                   p.max_tasks))(keys)
+
+
+def train_method(method: str, p: envlib.EnvParams, cfg: ag.AgentConfig,
+                 episodes: int, key, verbose: bool = False, f=None):
+    """Full training run.  Returns (per-episode avg delays, final states).
+
+    ES capacities ``f`` are sampled once (hardware is fixed across
+    episodes); pass the same ``f`` to evaluate_method."""
+    key, k_init, k_f = jax.random.split(key, 3)
+    if f is None:
+        f = envlib.sample_capacities(k_f, p)
+    states = init_agents(method, p, cfg, k_init)
+    episode = jax.jit(build_episode_fn(method, p, cfg, train=True))
+    delays = []
+    for e in range(episodes):
+        key, k_ep, k_run = jax.random.split(key, 3)
+        ep_data = envlib.sample_episode(k_ep, p, f=f)
+        t0 = time.time()
+        states, avg = episode(states, ep_data, k_run)
+        avg = float(avg)
+        delays.append(avg)
+        if verbose:
+            print(f"[{method}] episode {e:3d} avg_delay={avg:7.3f}s "
+                  f"({time.time()-t0:.1f}s wall)", flush=True)
+    return delays, states
+
+
+def evaluate_method(method: str, p: envlib.EnvParams, cfg: ag.AgentConfig,
+                    states, key, n_episodes: int = 5, f=None) -> float:
+    """Average delay over fresh episodes without training updates."""
+    episode = jax.jit(build_episode_fn(method, p, cfg, train=False))
+    tot = 0.0
+    if f is None:
+        _, k_f = jax.random.split(jax.random.key(0))
+        f = envlib.sample_capacities(k_f, p)
+    for e in range(n_episodes):
+        key, k_ep, k_run = jax.random.split(key, 3)
+        ep_data = envlib.sample_episode(k_ep, p, f=f)
+        _, avg = episode(states, ep_data, k_run)
+        tot += float(avg)
+    return tot / n_episodes

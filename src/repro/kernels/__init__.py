@@ -1,0 +1,3 @@
+from repro.kernels.ops import flash_attention, flash_decode, ladn_denoise
+
+__all__ = ["flash_attention", "flash_decode", "ladn_denoise"]

@@ -1,0 +1,110 @@
+"""Pallas TPU flash-decode: one query token against a deep KV cache.
+
+The decode_32k / long_500k serving shapes are memory-bound: the whole
+point of the kernel is to stream the (B, KV, S, hd) cache through VMEM
+exactly once with online softmax, instead of materialising (B, H, S)
+score tensors in HBM.
+
+Grid: (B * KV, S/bk) — kv blocks innermost, running (m, l, acc) in VMEM
+scratch like the prefill kernel.  All G = H/KV query heads of one KV group
+are processed together as a (G, hd) tile (G is tiny: 1-16), so the MXU
+sees a (G, hd) x (hd, bk) matmul per block.
+
+``length`` masks ring-buffer slots that are not yet populated (cache pos
+< capacity); fully-invalid trailing blocks are skipped with @pl.when.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, bk: int, nk: int, G: int):
+    kj = pl.program_id(1)
+    k_start = kj * bk
+    length = len_ref[0]
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # (G, hd)
+        k = k_ref[0].astype(jnp.float32)              # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, bk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (G, bk), 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = (acc_scr[...] * corr
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q, k_cache, v_cache, length, *, bk: int = 512,
+                 interpret: bool = False) -> jnp.ndarray:
+    """q (B, H, hd); caches (B, KV, S, hd); length () or (B,) valid tokens.
+
+    Returns (B, H, hd).
+    """
+    B, H, hd = q.shape
+    KV, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    bk = min(bk, S)
+    assert S % bk == 0
+    nk = S // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    qf = q.reshape(B, KV, G, hd).reshape(B * KV, G, hd)
+    kf = k_cache.reshape(B * KV, S, hd)
+    vf = v_cache.reshape(B * KV, S, hd)
+    lengths = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+    lengths = jnp.repeat(lengths, KV)                  # (B*KV,)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, bk=bk, nk=nk,
+                               G=G)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * KV, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, kj: (bh,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, hd), lambda bh, kj: (bh, 0, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, kj: (bh, kj, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, kj: (bh, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda bh, kj: (bh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, qf, kf, vf)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,264 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"  # noqa: E501
+
+# --- everything below may import jax ---------------------------------------
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh), jit the real step function
+with production in_shardings, ``.lower().compile()`` it against
+ShapeDtypeStruct inputs (no allocation), and record:
+  * memory_analysis()  -> bytes per device (proves it fits 16 GB HBM)
+  * cost_analysis()    -> FLOPs / bytes (roofline inputs)
+  * collective bytes parsed from the optimized HLO (roofline collective
+    term), with while-loop trip-count scaling.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.jsonl]
+"""
+import argparse   # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config, get_shape, SHAPES  # noqa: E402
+from repro.launch import sharding as shlib                          # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,      # noqa: E402
+                               make_production_mesh, mesh_chips)
+from repro.launch.specs import (input_specs, output_shardings,      # noqa: E402
+                                _batch_axes)
+from repro.models.transformer import config_for_shape               # noqa: E402
+from repro.roofline import analysis as ra                           # noqa: E402
+from repro.train.steps import (make_decode_step, make_prefill_step,  # noqa: E402
+                               make_train_step)
+
+
+def step_for_shape(cfg, shape):
+    if shape.kind == "train":
+        return make_train_step(cfg)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg)
+    # decode: greedy token, no rng arg
+    fn = make_decode_step(cfg, sample=False)
+    return lambda params, batch, states: fn(params, batch, states)
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool,
+              arch_overrides=None):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    cfg = config_for_shape(cfg, shape)
+    if arch_overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **arch_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = shlib.ShardingContext(
+        mesh, rules={"batch": _batch_axes(mesh, shape.global_batch)})
+    step = step_for_shape(cfg, shape)
+    args, kwargs = input_specs(cfg, shape, mesh)
+    with mesh:
+        with shlib.use(ctx):
+            out_shapes = jax.eval_shape(step, *args, **kwargs)
+            outs = output_shardings(cfg, shape, mesh, out_shapes)
+            lowered = jax.jit(step, out_shardings=outs).lower(*args,
+                                                              **kwargs)
+    return cfg, shape, mesh, lowered
+
+
+def analyse(cfg, shape, mesh, lowered, compile_s: float, compiled,
+            save_hlo_dir=None):
+    chips = mesh_chips(mesh)
+    cost = {}
+    try:
+        cost = compiled.cost_analysis() or {}
+    except Exception as e:  # pragma: no cover
+        cost = {"error": str(e)}
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                mem[k] = getattr(ma, k, None)
+    except Exception as e:  # pragma: no cover
+        mem = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    if save_hlo_dir:
+        import gzip
+        os.makedirs(save_hlo_dir, exist_ok=True)
+        mesh_tag = "x".join(str(s) for s in mesh.devices.shape)
+        path = os.path.join(save_hlo_dir,
+                            f"{cfg.name}__{shape.name}__{mesh_tag}.hlo.gz")
+        with gzip.open(path, "wt") as f:
+            f.write(hlo)
+    colls = ra.collect_collectives(hlo)
+    coll_bytes = sum(c.scaled_bytes for c in colls)
+    coll_by_kind = {}
+    for c in colls:
+        coll_by_kind[c.kind] = coll_by_kind.get(c.kind, 0) + c.scaled_bytes
+
+    raw_flops = float(cost.get("flops", 0.0) or 0.0)
+    raw_bytes = float(cost.get("bytes accessed", 0.0) or 0.0)
+    flops_scaled, bytes_scaled, dot_flops = ra.scaled_cost(
+        hlo, raw_flops, raw_bytes)
+    # prefer the trip-scaled dot-walk estimate when it exceeds the raw
+    # number (raw counts loop bodies once); keep raw otherwise.
+    hlo_flops = max(flops_scaled, raw_flops)
+    hlo_bytes = max(bytes_scaled, raw_bytes)
+    mflops = ra.model_flops(cfg, shape)
+    mflops_per_chip = mflops / chips
+    terms = ra.roofline_terms(hlo_flops, hlo_bytes, coll_bytes, chips,
+                              PEAK_FLOPS_BF16, HBM_BW, ICI_BW)
+    return {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": chips,
+        "compile_s": round(compile_s, 1),
+        "raw_flops": raw_flops,
+        "hlo_flops": hlo_flops,
+        "hlo_bytes": hlo_bytes,
+        "collective_bytes": coll_bytes,
+        "collective_by_kind": coll_by_kind,
+        "n_collectives": len(colls),
+        "model_flops": mflops,
+        "useful_ratio": ((mflops_per_chip / hlo_flops)
+                         if hlo_flops else None),
+        "memory_analysis": mem,
+        **terms,
+    }
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, verbose=True,
+            arch_overrides=None, tag=None, save_hlo_dir=None):
+    t0 = time.time()
+    cfg, shape, mesh, lowered = lower_one(arch, shape_name, multi_pod,
+                                          arch_overrides=arch_overrides)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} mesh="
+              f"{'x'.join(str(s) for s in mesh.devices.shape)} "
+              f"lower={t1-t0:.1f}s compile={t2-t1:.1f}s", flush=True)
+        try:
+            print(compiled.memory_analysis())
+        except Exception as e:
+            print("memory_analysis unavailable:", e)
+        try:
+            ca = compiled.cost_analysis()
+            print({k: ca[k] for k in ("flops", "bytes accessed")
+                   if k in ca})
+        except Exception as e:
+            print("cost_analysis unavailable:", e)
+    rec = analyse(cfg, shape, mesh, lowered, t2 - t1, compiled,
+                  save_hlo_dir=save_hlo_dir)
+    if tag:
+        rec["tag"] = tag
+    if arch_overrides:
+        rec["overrides"] = {k: str(v) for k, v in arch_overrides.items()}
+    return rec
+
+
+def skip_reason(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if shape.kind == "decode" and shape.seq_len > 65536:
+        if not cfg.is_subquadratic():
+            return "full attention without long-context variant"
+    return None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS)
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in SHAPES])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) for the chosen mesh")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default=None,
+                    help="label for this run's records (perf iterations)")
+    ap.add_argument("--save-hlo", default=None,
+                    help="directory to store gzipped optimized HLO per "
+                         "combo (lets roofline analysis be re-run without "
+                         "recompiling)")
+    ap.add_argument("--set", dest="overrides", action="append", default=[],
+                    help="ModelConfig override, e.g. --set microbatches=4 "
+                         "--set remat=False (perf iterations)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for item in args.overrides:
+        k, v = item.split("=", 1)
+        try:
+            import ast
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                combos.append((a, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    done = set()
+    if args.out and args.skip_existing and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+                except Exception:
+                    pass
+
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+    failures = []
+    for arch, shape_name in combos:
+        if (arch, shape_name, mesh_tag) in done:
+            print(f"[dryrun] skip existing {arch} x {shape_name}")
+            continue
+        reason = skip_reason(arch, shape_name)
+        rec = None
+        if reason:
+            rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                   "skipped": reason}
+            print(f"[dryrun] SKIP {arch} x {shape_name}: {reason}")
+        else:
+            try:
+                rec = run_one(arch, shape_name, args.multi_pod,
+                              arch_overrides=overrides or None,
+                              tag=args.tag, save_hlo_dir=args.save_hlo)
+                print(f"[dryrun] OK {arch} x {shape_name}: "
+                      f"bottleneck={rec['bottleneck']} "
+                      f"compute={rec['compute_s']:.3e}s "
+                      f"memory={rec['memory_s']:.3e}s "
+                      f"collective={rec['collective_s']:.3e}s", flush=True)
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((arch, shape_name, str(e)))
+                rec = {"arch": arch, "shape": shape_name, "mesh": mesh_tag,
+                       "error": str(e)[:2000]}
+        if args.out and rec is not None:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for a, s, e in failures:
+            print(f"  {a} x {s}: {e[:200]}")
+        raise SystemExit(1)
+    print("[dryrun] all combinations lowered and compiled successfully")
+
+
+if __name__ == "__main__":
+    main()

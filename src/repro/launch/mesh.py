@@ -1,0 +1,31 @@
+"""Production mesh definitions (TPU v5e target).
+
+Single pod : (16, 16)    -> ("data", "model"), 256 chips
+Multi-pod  : (2, 16, 16) -> ("pod", "data", "model"), 512 chips
+
+Functions (not module constants) so importing never touches jax device
+state — the dry-run must set XLA_FLAGS before the first jax call.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12        # per chip, FLOP/s
+HBM_BW = 819e9                  # per chip, bytes/s
+ICI_BW = 50e9                   # per link, bytes/s
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with the production axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    return mesh.devices.size

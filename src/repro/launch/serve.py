@@ -1,0 +1,56 @@
+"""Serving launcher: one DEdgeAI-style worker on a reduced model.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
+      --requests 8 --tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.models.transformer import init_params
+from repro.serving.engine import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--sample", action="store_true")
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    key = jax.random.key(0)
+    params = init_params(key, cfg)
+    engine = ServeEngine(cfg, params,
+                         max_len=args.prompt_len + args.tokens
+                         + cfg.vision_patches,
+                         sample=args.sample)
+
+    for r in range(args.requests):
+        key, kp = jax.random.split(key)
+        if cfg.num_codebooks:
+            prompt = jax.random.randint(
+                kp, (1, cfg.num_codebooks, args.prompt_len), 0,
+                cfg.vocab_size)
+        else:
+            prompt = jax.random.randint(kp, (1, args.prompt_len), 0,
+                                        cfg.vocab_size)
+        patches = None
+        if cfg.vision_patches:
+            patches = jax.random.normal(
+                kp, (1, cfg.vision_patches, cfg.vision_dim))
+        res = engine.generate(prompt, args.tokens, rng=kp, patches=patches)
+        print(f"[serve] req {r}: prefill={res.prefill_s*1e3:.1f}ms "
+              f"decode={res.decode_s*1e3:.1f}ms "
+              f"queue={res.queue_s*1e3:.1f}ms "
+              f"tok/s={args.tokens/max(res.decode_s,1e-9):.1f}")
+
+
+if __name__ == "__main__":
+    main()

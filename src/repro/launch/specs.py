@@ -1,0 +1,182 @@
+"""ShapeDtypeStruct input specs for every (architecture x input shape).
+
+``input_specs`` returns everything a step function consumes *except*
+params/optimizer state, as weak-type-correct, shardable ShapeDtypeStructs —
+no device allocation, following the shannon/kernels dry-run pattern.
+
+Modality carve-outs: [audio] provides the EnCodec codebook token streams;
+[vlm] provides precomputed ViT patch embeddings (the one sanctioned stub).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.launch import sharding as shlib
+from repro.models.transformer import init_layer_states
+
+
+def _sds(shape, dtype, mesh: Optional[Mesh], spec: Optional[P]):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _batch_axes(mesh: Optional[Mesh], global_batch: Optional[int] = None):
+    """Batch sharding axes, degrading gracefully when the batch is too
+    small to split (long_500k has global_batch=1: replicate)."""
+    if mesh is None:
+        return "data"
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if global_batch is not None:
+        size = 1
+        kept = []
+        for a in axes:
+            size *= mesh.shape[a]
+        if global_batch % size != 0:
+            kept = [a for a in axes if global_batch % mesh.shape[a] == 0]
+            axes = tuple(kept[:1])  # fall back to one axis or none
+            if not axes or global_batch % mesh.shape[axes[0]] != 0:
+                return None
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def token_specs(cfg: ModelConfig, shape: InputShape,
+                mesh: Optional[Mesh] = None) -> Dict[str, Any]:
+    """Model inputs (tokens / patches / labels) for the given step kind."""
+    B = shape.global_batch
+    dp = _batch_axes(mesh, B)
+    out: Dict[str, Any] = {}
+    if shape.kind == "decode":
+        S = 1
+    else:
+        S = shape.seq_len
+    text_len = S
+    if cfg.vision_patches and shape.kind != "decode":
+        text_len = S - cfg.vision_patches
+        assert text_len > 0
+        out["patches"] = _sds((B, cfg.vision_patches, cfg.vision_dim),
+                              jnp.dtype(cfg.dtype), mesh, P(dp, None, None))
+    if cfg.num_codebooks:
+        out["tokens"] = _sds((B, cfg.num_codebooks, text_len), jnp.int32,
+                             mesh, P(dp, None, None))
+    else:
+        out["tokens"] = _sds((B, text_len), jnp.int32, mesh, P(dp, None))
+    if shape.kind == "train":
+        if cfg.num_codebooks:
+            out["labels"] = _sds((B, cfg.num_codebooks, S), jnp.int32, mesh,
+                                 P(dp, None, None))
+        else:
+            out["labels"] = _sds((B, S), jnp.int32, mesh, P(dp, None))
+        if cfg.vision_patches:
+            out["mask"] = _sds((B, S), jnp.float32, mesh, P(dp, None))
+    return out
+
+
+def state_specs(cfg: ModelConfig, shape: InputShape,
+                mesh: Optional[Mesh] = None):
+    """Decode-shape layer states: a seq_len-deep cache, as SDS."""
+    assert shape.kind == "decode"
+    states = init_layer_states(cfg, shape.global_batch, shape.seq_len,
+                               make=jax.ShapeDtypeStruct)
+    if mesh is None:
+        return states
+    specs = shlib.state_pspecs(states, mesh,
+                               batch_axes=_batch_axes(mesh,
+                                                      shape.global_batch))
+    return jax.tree_util.tree_map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        states, specs)
+
+
+def param_specs(cfg: ModelConfig, mesh: Optional[Mesh] = None):
+    from repro.models.transformer import abstract_params
+    params = abstract_params(cfg)
+    if mesh is None:
+        return params
+    specs = shlib.param_pspecs(params, mesh)
+    return jax.tree_util.tree_map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        params, specs)
+
+
+def opt_state_specs(param_sds):
+    """AdamW state mirrors params twice in f32 (mu, nu) + a step counter."""
+    from repro.train.optimizer import AdamWState
+    f32 = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32,
+                                       sharding=getattr(s, "sharding", None)),
+        param_sds)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=f32,
+                      nu=f32)
+
+
+def output_shardings(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                     out_shapes) -> object:
+    """Explicit out_shardings for the step functions.
+
+    Inferred output shardings can be invalid when a dim is smaller than the
+    mesh axis GSPMD picks for it (e.g. an 8-kv-head cache on 16-way
+    'model'), so the launcher always pins outputs.
+    """
+    dp = _batch_axes(mesh, shape.global_batch)
+
+    def ns(spec):
+        return NamedSharding(mesh, spec)
+
+    def logits_spec(x):
+        if x.ndim == 3:    # (B, K, V) multi-codebook
+            return ns(P(dp, None, "model"))
+        return ns(P(dp, "model"))
+
+    if shape.kind == "train":
+        params_sd, opt_sd, metrics_sd = out_shapes
+        pspec = jax.tree_util.tree_map(
+            lambda s: ns(s), shlib.param_pspecs(params_sd, mesh),
+            is_leaf=lambda x: isinstance(x, P))
+        from repro.train.optimizer import AdamWState
+        opt = AdamWState(
+            step=ns(P()),
+            mu=jax.tree_util.tree_map(
+                lambda s: ns(s), shlib.param_pspecs(opt_sd.mu, mesh),
+                is_leaf=lambda x: isinstance(x, P)),
+            nu=jax.tree_util.tree_map(
+                lambda s: ns(s), shlib.param_pspecs(opt_sd.nu, mesh),
+                is_leaf=lambda x: isinstance(x, P)))
+        metrics = jax.tree_util.tree_map(lambda s: ns(P()), metrics_sd)
+        return (pspec, opt, metrics)
+
+    def states_shardings(states_sd):
+        specs = shlib.state_pspecs(states_sd, mesh, batch_axes=dp)
+        return jax.tree_util.tree_map(
+            lambda sp: ns(sp), specs, is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "prefill":
+        last_logits_sd, states_sd = out_shapes
+        return (logits_spec(last_logits_sd), states_shardings(states_sd))
+    logits_sd, tok_sd, states_sd = out_shapes
+    tok = ns(P(dp, None)) if tok_sd.ndim == 2 else ns(P(dp))
+    return (logits_spec(logits_sd), tok, states_shardings(states_sd))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                mesh: Optional[Mesh] = None) -> Tuple[tuple, dict]:
+    """(args, kwargs) for the shape's step function, params included."""
+    from repro.models.transformer import config_for_shape
+    cfg = config_for_shape(cfg, shape)
+    p = param_specs(cfg, mesh)
+    toks = token_specs(cfg, shape, mesh)
+    if shape.kind == "train":
+        return (p, opt_state_specs(p), toks), {}
+    if shape.kind == "prefill":
+        return (p, toks), {}
+    return (p, toks, state_specs(cfg, shape, mesh)), {}

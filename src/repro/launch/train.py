@@ -1,0 +1,87 @@
+"""Training launcher.
+
+CPU (this environment): reduced configs, real optimization, loss curve.
+TPU: the same code path jits onto the production mesh with the dry-run's
+shardings (``--mesh single|multi``).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
+      --smoke --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import DataConfig, synth_batch
+from repro.launch import sharding as shlib
+from repro.launch.mesh import make_production_mesh, make_smoke_mesh
+from repro.models.transformer import init_params
+from repro.train import optimizer as opt_lib
+from repro.train.checkpoint import save_checkpoint
+from repro.train.steps import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--mesh", choices=["none", "single", "multi"],
+                    default="none")
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    if cfg.vision_patches and args.seq_len <= cfg.vision_patches:
+        args.seq_len = cfg.vision_patches + 64
+
+    opt_cfg = opt_lib.AdamWConfig(learning_rate=args.lr,
+                                  warmup_steps=max(args.steps // 10, 1),
+                                  total_steps=args.steps)
+    dc = DataConfig(batch=args.batch, seq_len=args.seq_len)
+
+    mesh = None
+    if args.mesh == "single":
+        mesh = make_production_mesh()
+    elif args.mesh == "multi":
+        mesh = make_production_mesh(multi_pod=True)
+
+    key = jax.random.key(0)
+    params = init_params(key, cfg)
+    opt_state = opt_lib.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+
+    ctx = shlib.ShardingContext(mesh) if mesh is not None else None
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"batch={dc.batch} seq={dc.seq_len}", flush=True)
+
+    with shlib.use(ctx):
+        t_start = time.time()
+        for step in range(args.steps):
+            batch = synth_batch(cfg, dc, step)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                print(f"[train] step {step:4d} loss={loss:8.4f} "
+                      f"lr={float(metrics['lr']):.2e} "
+                      f"gnorm={float(metrics['grad_norm']):.2f} "
+                      f"({time.time()-t_start:.1f}s)", flush=True)
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params, opt_state, args.steps)
+        print(f"[train] saved {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

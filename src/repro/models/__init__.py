@@ -1,0 +1,8 @@
+from repro.models.transformer import (abstract_params, apply_head,
+                                      config_for_shape, embed_inputs,
+                                      forward, init_layer_states, init_params)
+
+__all__ = [
+    "abstract_params", "apply_head", "config_for_shape", "embed_inputs",
+    "forward", "init_layer_states", "init_params",
+]

@@ -1,0 +1,133 @@
+"""RecurrentGemma / Griffin recurrent block: conv1d + RG-LRU.
+
+Block structure (arXiv:2402.19427):
+    x -> [gate branch: W_gate -> GeLU] ---------------------\
+    x -> [main branch: W_in -> causal depthwise conv1d       * -> W_out
+          -> RG-LRU diagonal recurrence] --------------------/
+
+RG-LRU (real-gated linear recurrent unit), all diagonal / elementwise:
+    r_t = sigmoid(block_diag(W_a) u_t)          recurrence gate
+    i_t = sigmoid(block_diag(W_x) u_t)          input gate
+    log a_t = -c * softplus(Lambda) * r_t       (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The diagonal-linear form admits a parallel prefix-scan evaluation; the
+baseline uses lax.scan (sequential, as Griffin's TPU reference does) and
+``use_assoc_scan=True`` switches to lax.associative_scan — the beyond-paper
+perf lever exercised in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+_C = 8.0
+_NBLOCKS = 8  # block-diagonal gate projections, as in Griffin
+
+
+def init_rglru(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    rd = cfg.rg_lru_dim or d
+    bs = rd // _NBLOCKS
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], d, rd, dtype),
+        "w_gate_in": dense_init(ks[1], d, rd, dtype),
+        "w_out": dense_init(ks[2], rd, d, dtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv1d_width, rd))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((rd,), dtype),
+        # block-diagonal gate weights (nblocks, bs, bs), float32
+        "gate_a": jax.random.normal(ks[4], (_NBLOCKS, bs, bs)) * (bs ** -0.5),
+        "gate_x": jax.random.normal(ks[5], (_NBLOCKS, bs, bs)) * (bs ** -0.5),
+        # Lambda init so that a ~ U[0.9, 0.999] at r=1 (Griffin appendix)
+        "lam": jax.random.uniform(ks[6], (rd,), jnp.float32, 2.0, 5.0),
+    }
+
+
+def init_rglru_state(cfg, batch: int, make=jnp.zeros):
+    rd = cfg.rg_lru_dim or cfg.d_model
+    return {
+        "h": make((batch, rd), jnp.float32),
+        "conv": make((batch, cfg.conv1d_width - 1, rd), jnp.float32),
+        "pos": make((), jnp.int32),
+    }
+
+
+def _block_diag(w, x):
+    """x (..., rd) @ block_diag(w (nb, bs, bs)) -> (..., rd), float32."""
+    nb, bs, _ = w.shape
+    xs = x.reshape(*x.shape[:-1], nb, bs)
+    out = jnp.einsum("...nb,nbc->...nc", xs.astype(jnp.float32), w)
+    return out.reshape(*x.shape)
+
+
+def _gates(p, u):
+    """u (..., rd) float32 -> (log_a, gated input) elementwise terms."""
+    r = jax.nn.sigmoid(_block_diag(p["gate_a"], u))
+    i = jax.nn.sigmoid(_block_diag(p["gate_x"], u))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u)
+    return a, b
+
+
+def _conv1d(p, u):
+    """Causal depthwise conv over (B, S, rd)."""
+    W = p["conv_w"].shape[0]
+    pad = jnp.pad(u, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1]] * p["conv_w"][i] for i in range(W))
+    return out + p["conv_b"]
+
+
+def rglru_scan(p, cfg, x, *, use_assoc_scan: bool = False
+               ) -> Tuple[jnp.ndarray, dict]:
+    """x (B, S, d) -> ((B, S, d), final state)."""
+    gate = jax.nn.gelu(x @ p["w_gate_in"])
+    u_raw = (x @ p["w_in"]).astype(jnp.float32)
+    u = _conv1d(p, u_raw.astype(x.dtype)).astype(jnp.float32)
+    a, b = _gates(p, u)
+    if use_assoc_scan:
+        # h_t = a_t h_{t-1} + b_t  ==  prefix scan over (a, b) pairs
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    else:
+        def step(hprev, ab):
+            at, bt = ab
+            h_new = at * hprev + bt
+            return h_new, h_new
+        B, S, rd = u.shape
+        _, hs = jax.lax.scan(step, jnp.zeros((B, rd), jnp.float32),
+                             (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+        h = hs.swapaxes(0, 1)
+    out = h.astype(x.dtype) * gate
+    Wc = p["conv_w"].shape[0]
+    S = x.shape[1]
+    conv_hist = jnp.pad(u_raw, ((0, 0), (Wc - 1, 0), (0, 0)))[:, S:S + Wc - 1]
+    state = {"h": h[:, -1], "conv": conv_hist,
+             "pos": jnp.asarray(S, jnp.int32)}
+    return out @ p["w_out"], state
+
+
+def rglru_step(p, cfg, x, state) -> Tuple[jnp.ndarray, dict]:
+    """One decode step.  x (B, 1, d)."""
+    xt = x[:, 0]
+    gate = jax.nn.gelu(xt @ p["w_gate_in"])
+    u_in = (xt @ p["w_in"]).astype(jnp.float32)
+    # causal conv via the rolling buffer of the last (W-1) inputs
+    hist = jnp.concatenate([state["conv"], u_in[:, None]], axis=1)
+    W = p["conv_w"].shape[0]
+    u = sum(hist[:, i] * p["conv_w"][i].astype(jnp.float32) for i in range(W))
+    u = u + p["conv_b"].astype(jnp.float32)
+    a, b = _gates(p, u)
+    h = a * state["h"] + b
+    out = (h.astype(x.dtype) * gate) @ p["w_out"]
+    new_state = {"h": h, "conv": hist[:, 1:], "pos": state["pos"] + 1}
+    return out[:, None], new_state

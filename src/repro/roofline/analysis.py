@@ -1,0 +1,321 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs      / (chips * PEAK_FLOPS_BF16)
+    memory     = HLO_bytes      / (chips * HBM_BW)
+    collective = coll_bytes     / (chips * ICI_BW)
+
+Sources:
+  * ``compiled.cost_analysis()`` -> flops / bytes accessed.  XLA counts a
+    while-loop body ONCE, so scan-over-layers (and the chunked-attention /
+    chunked-CE scans) would undercount by the trip count: we parse the
+    optimized HLO, attribute ops to their enclosing computation, recover
+    each while loop's trip count from its induction-variable bound, and
+    scale.
+  * collective bytes are NOT in cost_analysis: we sum operand sizes of
+    every all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute in the optimized HLO (same loop scaling).
+  * MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference), N = active params —
+    the "useful compute" yardstick; HLO/MODEL ratio surfaces remat or
+    dispatch waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[16,128]{1,0}' or tuple '(f32[2], s32[])' -> total bytes."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes: int
+    computation: str
+    scaled_bytes: int = 0
+
+
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+
+
+def split_computations(hlo: str) -> Tuple[Dict[str, List[str]], str]:
+    """Optimized-HLO text -> ({computation_name: [op lines]}, entry)."""
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    entry = ""
+    for line in hlo.splitlines():
+        s = line.rstrip()
+        m = _HDR_RE.match(s.strip())
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+        elif cur is not None and s.strip() == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(s.strip())
+    return comps, entry
+
+
+def _extract_bound(cond_lines: List[str]) -> Optional[int]:
+    consts = []
+    for ln in cond_lines:
+        m = re.search(r"constant\((\d+)\)", ln)
+        if m:
+            consts.append(int(m.group(1)))
+    if not consts:
+        return None  # bound flows in as a parameter (dynamic): unknown
+    return max(consts)  # jax scans compare i < N; N is the largest constant
+
+
+_CALL_RE = re.compile(
+    r"(?:condition=|body=|calls=|to_apply=)%?([\w\.\-]+)")
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)", re.S)
+
+
+def computation_multipliers(hlo: str) -> Tuple[Dict[str, float],
+                                               Dict[str, List[str]],
+                                               Dict[str, bool]]:
+    """Execution-count multiplier per computation, plus a "control" flag.
+
+    Nesting-aware: a while body executes trip(cond) times per execution of
+    its enclosing computation; fusions / wrapped computations inherit their
+    caller's multiplier.  Unknown trip counts count as 1 (conservative).
+
+    ``control[comp]`` is True for the entry and loop bodies/conditions —
+    the computations whose op outputs are real HBM buffers (fusion
+    internals never touch HBM).
+    """
+    comps, entry = split_computations(hlo)
+    # build call edges: comp -> [(callee, factor)]
+    edges: Dict[str, List[Tuple[str, float]]] = {c: [] for c in comps}
+    control: Dict[str, bool] = {c: False for c in comps}
+    if entry in comps:
+        control[entry] = True
+    for comp, lines in comps.items():
+        for ln in lines:
+            if "while(" in ln:
+                mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if mb and mc:
+                    trip = _extract_bound(comps.get(mc.group(1), [])) or 1
+                    edges[comp].append((mb.group(1), float(trip)))
+                    edges[comp].append((mc.group(1), float(trip)))
+                    control[mb.group(1)] = True
+                    control[mc.group(1)] = True
+                    continue
+            if "conditional(" in ln:
+                for m in _CALL_RE.finditer(ln):
+                    if m.group(1) in comps:
+                        edges[comp].append((m.group(1), 1.0))
+                        control[m.group(1)] = True
+                continue
+            for m in _CALL_RE.finditer(ln):
+                callee = m.group(1)
+                if callee in comps and "while(" not in ln:
+                    edges[comp].append((callee, 1.0))
+
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    if entry not in comps:
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else ""
+        control[entry] = True
+    if entry:
+        mult[entry] = 1.0
+        # propagate in topological-ish order via repeated relaxation
+        for _ in range(24):
+            changed = False
+            for comp, outs in edges.items():
+                base = mult.get(comp, 0.0)
+                if base == 0.0:
+                    continue
+                for callee, factor in outs:
+                    add = base * factor
+                    if mult.get(callee, 0.0) < add:
+                        mult[callee] = add
+                        changed = True
+            if not changed:
+                break
+    for c in comps:
+        mult.setdefault(c, 1.0)
+        if mult[c] == 0.0:
+            mult[c] = 1.0  # unreached (e.g. dead comp): count once
+    return mult, comps, control
+
+
+def collect_collectives(hlo: str) -> List[CollectiveOp]:
+    mult, comps, _ = computation_multipliers(hlo)
+    out: List[CollectiveOp] = []
+    for comp, lines in comps.items():
+        m = mult.get(comp, 1.0)
+        for ln in lines:
+            for kind in _COLLECTIVES:
+                idx = ln.find(f" {kind}(")
+                if idx < 0 or "=" not in ln[:idx]:
+                    continue
+                # output shape(s): between '=' and the op mnemonic
+                seg = ln[ln.index("=") + 1:idx]
+                b = _shape_bytes(seg)
+                if b == 0:  # odd formatting: whole-line fallback
+                    b = _shape_bytes(ln)
+                out.append(CollectiveOp(kind=kind, bytes=b,
+                                        computation=comp,
+                                        scaled_bytes=int(b * m)))
+                break
+    return out
+
+
+def scaled_cost(hlo: str, raw_flops: float, raw_bytes: float
+                ) -> Tuple[float, float, float]:
+    """Scale cost_analysis totals by while trip counts.
+
+    XLA counts each while body once; we re-estimate FLOPs per computation
+    from dot shapes scaled by the nesting-aware execution multipliers.
+    Returns (flops_scaled, bytes_scaled, dot_flops_unscaled).
+    """
+    mult, comps, control = computation_multipliers(hlo)
+    total = 0.0
+    unscaled = 0.0
+    bytes_total = 0.0
+    for comp, lines in comps.items():
+        m = mult.get(comp, 1.0)
+        f = _comp_dot_flops(lines)
+        total += f * m
+        unscaled += f
+        if control.get(comp):
+            # HBM traffic proxy: outputs of materializing top-level ops
+            # (fusion internals never hit HBM; bitcasts / tuples /
+            # parameters are views).  Reads are other ops' writes, so
+            # outputs are counted once.
+            b = 0.0
+            b_once = 0.0
+            for ln in lines:
+                dm = _DEF_RE.match(ln)
+                if not dm:
+                    continue
+                if not _MATERIALIZING_RE.search(ln):
+                    continue
+                sz = _shape_bytes(dm.group(2))
+                if "dynamic_update_slice" in ln or \
+                        "dynamic-update-slice" in ln:
+                    # in-place slice write: the full buffer is written once
+                    # across the whole loop, not once per iteration
+                    b_once += sz
+                else:
+                    b += sz
+            bytes_total += b * m + b_once
+    bytes_scaled = max(bytes_total, raw_bytes)
+    return total, bytes_scaled, unscaled
+
+
+_MATERIALIZING_RE = re.compile(
+    r"\b(fusion|dot|convolution|copy|dynamic-slice|dynamic-update-slice|"
+    r"all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|"
+    r"scatter|gather|reduce|sort|rng|iota|broadcast|transpose|reshape|"
+    r"convert|select|add|multiply|concatenate|pad|slice)\(")
+
+
+_DEF_RE = re.compile(r"^%?([\w\.\-]+)\s*=\s*(\S+\[[\d,]*\])")
+_DOT_OPS_RE = re.compile(r"\bdot\(([^)]*)\)")
+
+
+def _comp_dot_flops(lines: List[str]) -> float:
+    """2 * M*N*K per dot, resolving operand shapes through the
+    computation's instruction definitions."""
+    defs: Dict[str, List[int]] = {}
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if m:
+            sm = _SHAPE_RE.search(m.group(2))
+            if sm:
+                defs[m.group(1)] = [int(d) for d in sm.group(2).split(",")
+                                    if d]
+    total = 0.0
+    for ln in lines:
+        if " dot(" not in ln or "=" not in ln:
+            continue
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        out_dims = defs.get(m.group(1), [])
+        out_elems = 1
+        for d in out_dims:
+            out_elems *= d
+        k = 1
+        mo = _DOT_OPS_RE.search(ln)
+        mk = re.search(r"lhs_contracting_dims=\{([\d,]+)\}", ln)
+        if mo and mk:
+            first = mo.group(1).split(",")[0].strip().lstrip("%")
+            dims0 = defs.get(first, [])
+            for idx in (int(i) for i in mk.group(1).split(",") if i):
+                if idx < len(dims0):
+                    k *= dims0[idx]
+        total += 2.0 * out_elems * k
+    return total
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def roofline_terms(flops: float, bytes_: float, coll_bytes: float,
+                   chips: int, peak_flops: float, hbm_bw: float,
+                   ici_bw: float) -> Dict[str, float]:
+    """Three roofline terms in seconds.
+
+    The compiled SPMD module is PER-DEVICE (cost_analysis numbers and the
+    HLO operand shapes are the per-chip shards), so each term divides by a
+    single chip's capability; ``chips`` normalises the formula-style
+    "global work / (chips x capability)" identically.
+    """
+    compute = flops / peak_flops
+    memory = bytes_ / hbm_bw
+    collective = coll_bytes / ici_bw
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", collective), key=lambda kv: kv[1])
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "bottleneck": dom[0],
+    }

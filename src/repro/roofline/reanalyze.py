@@ -1,0 +1,72 @@
+"""Re-derive roofline records from saved HLO (no recompilation).
+
+  PYTHONPATH=src python -m repro.roofline.reanalyze \
+      --hlo-dir results/hlo --out results/dryrun_16x16.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.configs import get_config, get_shape
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.transformer import config_for_shape
+from repro.roofline import analysis as ra
+
+
+def reanalyze_file(path: str) -> dict:
+    name = os.path.basename(path).replace(".hlo.gz", "")
+    arch, shape_name, mesh_tag = name.split("__")
+    cfg = config_for_shape(get_config(arch), get_shape(shape_name))
+    shape = get_shape(shape_name)
+    chips = 1
+    for d in mesh_tag.split("x"):
+        chips *= int(d)
+    with gzip.open(path, "rt") as f:
+        hlo = f.read()
+    colls = ra.collect_collectives(hlo)
+    coll_bytes = sum(c.scaled_bytes for c in colls)
+    coll_by_kind = {}
+    for c in colls:
+        coll_by_kind[c.kind] = coll_by_kind.get(c.kind, 0) + c.scaled_bytes
+    flops, bytes_, _ = ra.scaled_cost(hlo, 0.0, 0.0)
+    mflops = ra.model_flops(cfg, shape)
+    terms = ra.roofline_terms(flops, bytes_, coll_bytes, chips,
+                              PEAK_FLOPS_BF16, HBM_BW, ICI_BW)
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "chips": chips, "hlo_flops": flops, "hlo_bytes": bytes_,
+        "collective_bytes": coll_bytes,
+        "collective_by_kind": coll_by_kind,
+        "n_collectives": len(colls), "model_flops": mflops,
+        "useful_ratio": (mflops / chips / flops) if flops else None,
+        **terms,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hlo-dir", default="results/hlo")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--mesh", default=None, help="filter, e.g. 16x16")
+    args = ap.parse_args()
+    recs = []
+    for path in sorted(glob.glob(os.path.join(args.hlo_dir, "*.hlo.gz"))):
+        if args.mesh and not path.endswith(f"__{args.mesh}.hlo.gz"):
+            continue
+        rec = reanalyze_file(path)
+        recs.append(rec)
+        print(f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:8s} "
+              f"{rec['bottleneck']:10s} c={rec['compute_s']:.2e} "
+              f"m={rec['memory_s']:.2e} x={rec['collective_s']:.2e}")
+    if args.out:
+        with open(args.out, "w") as f:
+            for rec in recs:
+                f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

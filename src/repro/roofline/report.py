@@ -1,0 +1,96 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSONL artifacts.
+
+  PYTHONPATH=src python -m repro.roofline.report [--results results/]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional
+
+
+def load(path: str) -> List[dict]:
+    if not os.path.exists(path):
+        return []
+    recs = []
+    with open(path) as f:
+        for line in f:
+            try:
+                recs.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    return recs
+
+
+def latest_by_combo(recs: List[dict], tag: Optional[str] = None
+                    ) -> Dict[tuple, dict]:
+    out = {}
+    for r in recs:
+        if "bottleneck" not in r:
+            continue
+        if tag is not None and r.get("tag") != tag:
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(recs: Dict[tuple, dict]) -> str:
+    lines = ["| arch | shape | compile | HBM/dev (args+temp) | "
+             "collectives (count) |",
+             "|---|---|---|---|---|"]
+    for (arch, shape), r in sorted(recs.items()):
+        mem = r.get("memory_analysis", {})
+        args_b = mem.get("argument_size_in_bytes")
+        temp_b = mem.get("temp_size_in_bytes")
+        tot = (args_b or 0) + (temp_b or 0)
+        lines.append(
+            f"| {arch} | {shape} | {r.get('compile_s', '?')}s "
+            f"| {fmt_bytes(tot)} ({fmt_bytes(args_b)}+{fmt_bytes(temp_b)}) "
+            f"| {fmt_bytes(r.get('collective_bytes'))} "
+            f"({r.get('n_collectives', '?')}) |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs: Dict[tuple, dict]) -> str:
+    lines = ["| arch | shape | compute (s) | memory (s) | collective (s) "
+             "| bottleneck | useful |",
+             "|---|---|---|---|---|---|---|"]
+    for (arch, shape), r in sorted(recs.items()):
+        u = r.get("useful_ratio")
+        lines.append(
+            f"| {arch} | {shape} | {r['compute_s']:.2e} "
+            f"| {r['memory_s']:.2e} | {r['collective_s']:.2e} "
+            f"| **{r['bottleneck']}** "
+            f"| {'-' if u is None else f'{u:.2f}'} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results")
+    ap.add_argument("--tag", default=None)
+    args = ap.parse_args()
+    for fname, title in (("dryrun_16x16.jsonl", "16x16 (256 chips)"),
+                         ("dryrun_2x16x16.jsonl",
+                          "2x16x16 (512 chips, multi-pod)")):
+        recs = latest_by_combo(load(os.path.join(args.results, fname)),
+                               args.tag)
+        print(f"\n### Dry-run — {title}: {len(recs)} combos\n")
+        print(dryrun_table(recs))
+        print(f"\n### Roofline — {title}\n")
+        print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Flat-npz checkpointing for params + optimizer state + step.
+
+No orbax in this environment; paths are joined with '/' into npz keys and
+round-trip exactly (dtypes preserved, bf16 included via a view-cast shim
+since npz has no native bfloat16).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16_TAG = "__bf16__"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for keypath, leaf in flat:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in keypath)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            out[key + _BF16_TAG] = arr.view(np.uint16)
+        else:
+            out[key] = arr
+    return out
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    blobs = {"params/" + k: v for k, v in _flatten(params).items()}
+    if opt_state is not None:
+        blobs.update({"opt/" + k: v
+                      for k, v in _flatten(opt_state).items()})
+    blobs["__step__"] = np.asarray(step)
+    tmp = path + ".tmp"
+    np.savez(tmp, **blobs)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+
+
+def restore_checkpoint(path: str, params_like,
+                       opt_like=None) -> Tuple[Any, Any, int]:
+    """Restore into the structure of ``params_like`` / ``opt_like``."""
+    with np.load(path) as z:
+        blobs = {k: z[k] for k in z.files}
+    step = int(blobs.pop("__step__", 0))
+
+    def rebuild(like, prefix):
+        flat = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for keypath, leaf in flat[0]:
+            key = prefix + "/".join(
+                str(getattr(k, "key",
+                            getattr(k, "idx", getattr(k, "name", k))))
+                for k in keypath)
+            if key + _BF16_TAG in blobs:
+                arr = jnp.asarray(blobs[key + _BF16_TAG]).view(jnp.bfloat16)
+            else:
+                arr = jnp.asarray(blobs[key])
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+    params = rebuild(params_like, "params/")
+    opt = rebuild(opt_like, "opt/") if opt_like is not None else None
+    return params, opt, step

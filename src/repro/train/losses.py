@@ -1,0 +1,60 @@
+"""Sequence-chunked cross-entropy.
+
+At framework scale the full logits tensor is the single biggest activation
+(train_4k x 256k vocab = 0.5 TB in bf16), so the head matmul + softmax-CE
+run per sequence chunk under jax.checkpoint: logits for a chunk exist only
+transiently in both forward and backward.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import apply_head
+
+
+def _chunk_ce(params, cfg, h_chunk, labels_chunk, mask_chunk):
+    """h (B,c,d), labels (B,c)[or (B,K,c)] -> (sum_loss, sum_count)."""
+    logits = apply_head(params, cfg, h_chunk).astype(jnp.float32)
+    if cfg.num_codebooks:
+        # logits (B,c,K,V); labels (B,K,c)
+        labels_chunk = labels_chunk.swapaxes(1, 2)        # (B,c,K)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels_chunk[..., None],
+                               axis=-1)[..., 0]
+    nll = lse - gold
+    if cfg.num_codebooks:
+        nll = nll.mean(axis=-1)                            # avg codebooks
+    nll = nll * mask_chunk
+    return nll.sum(), mask_chunk.sum()
+
+
+def chunked_ce_loss(params, cfg, hidden, labels, mask=None,
+                    chunk: int = 256):
+    """hidden (B,S,d); labels (B,S) or (B,K,S); mask (B,S) of 0/1."""
+    B, S, d = hidden.shape
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    c = min(chunk, S)
+    while S % c:
+        c //= 2
+    n = S // c
+    hs = hidden.reshape(B, n, c, d).swapaxes(0, 1)         # (n,B,c,d)
+    ms = mask.reshape(B, n, c).swapaxes(0, 1)
+    if cfg.num_codebooks:
+        ls = labels.reshape(B, cfg.num_codebooks, n, c).transpose(2, 0, 1, 3)
+    else:
+        ls = labels.reshape(B, n, c).swapaxes(0, 1)
+
+    ckpt = jax.checkpoint(
+        lambda h, l, m: _chunk_ce(params, cfg, h, l, m))
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h, l, m = xs
+        s, k = ckpt(h, l, m)
+        return (tot + s, cnt + k), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)

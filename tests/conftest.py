@@ -1,0 +1,8 @@
+import os
+import sys
+
+# NOTE: no XLA_FLAGS here on purpose — smoke tests and benchmarks must see
+# the 1 real CPU device.  Only the dry-run (repro.launch.dryrun) forces 512
+# placeholder devices, and multi-device sharding tests spawn a subprocess
+# with their own flag (tests/test_sharding_multidevice.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,90 @@
+"""Scheduler agents + the Algorithm-1 episode harness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import agents as ag
+from repro.core import env as envlib
+from repro.core.trainer import (LEARNED, build_episode_fn, init_agents,
+                                train_method)
+
+P_SMALL = envlib.EnvParams(num_bs=4, num_slots=6, max_tasks=4)
+CFG = ag.AgentConfig(train_after=30, replay_capacity=200, batch_size=16)
+
+
+@pytest.mark.parametrize("method", ["lad-ts", "d2sac-ts", "sac-ts",
+                                    "dqn-ts", "opt-ts", "random-ts",
+                                    "local-ts"])
+def test_episode_runs_and_delay_finite(method):
+    key = jax.random.key(0)
+    states = init_agents(method, P_SMALL, CFG, key)
+    ep = envlib.sample_episode(key, P_SMALL)
+    episode = jax.jit(build_episode_fn(method, P_SMALL, CFG))
+    _, avg = episode(states, ep, key)
+    assert np.isfinite(float(avg))
+    assert float(avg) > 0
+
+
+def test_opt_beats_random():
+    key = jax.random.key(1)
+    ep = envlib.sample_episode(key, P_SMALL)
+    opt = jax.jit(build_episode_fn("opt-ts", P_SMALL, CFG))
+    rnd = jax.jit(build_episode_fn("random-ts", P_SMALL, CFG))
+    _, d_opt = opt(None, ep, key)
+    _, d_rnd = rnd(None, ep, key)
+    assert float(d_opt) < float(d_rnd)
+
+
+def test_ladts_act_updates_latent_store():
+    key = jax.random.key(2)
+    st = ag.ladts_init(key, CFG, P_SMALL.state_dim, P_SMALL.action_dim,
+                       P_SMALL.max_tasks)
+    s = jnp.ones((P_SMALL.state_dim,))
+    before = st.X[1]
+    a, st2 = ag.ladts_act(st, CFG, s, 1, key)
+    assert 0 <= int(a) < P_SMALL.action_dim
+    assert float(jnp.abs(st2.X[1] - before).max()) > 0
+    # other slots untouched
+    np.testing.assert_array_equal(np.asarray(st.X[0]),
+                                  np.asarray(st2.X[0]))
+
+
+def test_ladts_update_changes_networks():
+    key = jax.random.key(3)
+    st = ag.ladts_init(key, CFG, P_SMALL.state_dim, P_SMALL.action_dim,
+                       P_SMALL.max_tasks)
+    # seed the pool with synthetic transitions
+    spec = ag.transition_spec(P_SMALL.state_dim, P_SMALL.action_dim)
+    for j in range(40):
+        item = jax.tree_util.tree_map(
+            lambda x, j=j: jnp.asarray(
+                np.random.default_rng(j).standard_normal(x.shape),
+                x.dtype) if x.dtype != jnp.int32
+            else jnp.asarray(j % P_SMALL.action_dim, x.dtype), spec)
+        st = st._replace(replay=ag.replay_add(st.replay, item, True))
+    st2, metrics = ag.ladts_update(st, CFG, key)
+    assert np.isfinite(float(metrics["critic_loss"]))
+    assert np.isfinite(float(metrics["actor_loss"]))
+    diff = max(float(jnp.abs(a - b).max()) for a, b in zip(
+        jax.tree_util.tree_leaves(st.theta),
+        jax.tree_util.tree_leaves(st2.theta)))
+    assert diff > 0
+    # s-LADN refreshed from t-LADN after update (Alg. 1 line 18)
+    for a, b in zip(jax.tree_util.tree_leaves(st2.theta),
+                    jax.tree_util.tree_leaves(st2.theta_act)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+def test_learned_methods_improve_over_training():
+    """After a few episodes on an easy env (one clearly-fastest ES), the
+    learned scheduler must beat random."""
+    p = envlib.EnvParams(num_bs=4, num_slots=8, max_tasks=6,
+                         f_range=(5.0, 50.0))
+    cfg = ag.AgentConfig(train_after=50, replay_capacity=500,
+                         batch_size=32)
+    key = jax.random.key(4)
+    delays, _ = train_method("lad-ts", p, cfg, episodes=8, key=key)
+    rand_delays, _ = train_method("random-ts", p, cfg, episodes=3, key=key)
+    assert min(delays[-3:]) < np.mean(rand_delays) * 1.05

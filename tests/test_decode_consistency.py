@@ -1,0 +1,98 @@
+"""Serving correctness: prefill + decode must reproduce full-forward
+logits exactly (cache semantics), for every architecture family and both
+layer-evaluation modes (flat / grouped scan)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import forward, init_params
+
+S = 16
+B = 2
+
+
+def _cfg(arch, scan):
+    cfg = reduced(get_config(arch))
+    if cfg.moe:
+        # exactness needs the no-drop capacity regime
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+    # exact-match tests use the full-precision cache; int8-cache accuracy
+    # is covered separately in test_perf_features.py
+    return dataclasses.replace(cfg, scan_layers=scan,
+                               kv_cache_dtype="model")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("scan", [False, True])
+def test_decode_matches_full_forward(arch, scan):
+    cfg = _cfg(arch, scan)
+    key = jax.random.key(1)
+    params = init_params(key, cfg)
+    if cfg.num_codebooks:
+        toks = jax.random.randint(key, (B, cfg.num_codebooks, S + 1), 0,
+                                  cfg.vocab_size)
+        pre = {"tokens": toks[..., :S]}
+        nxt = {"tokens": toks[..., S:S + 1]}
+    else:
+        toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+        pre = {"tokens": toks[:, :S]}
+        nxt = {"tokens": toks[:, S:S + 1]}
+    extra = cfg.vision_patches or 0
+    if extra:
+        pre["patches"] = jax.random.normal(key, (B, extra, cfg.vision_dim))
+    full_in = dict(pre)
+    full_in["tokens"] = toks
+    full = forward(params, cfg, full_in, mode="prefill")["last_logits"]
+    st = forward(params, cfg, pre, mode="prefill",
+                 max_len=extra + S + 8)["states"]
+    dec = forward(params, cfg, nxt, mode="decode", states=st)["logits"]
+    assert float(jnp.max(jnp.abs(full - dec))) < 2e-3, arch
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "xlstm-350m",
+                                  "recurrentgemma-9b", "mixtral-8x22b"])
+def test_multistep_decode_matches_teacher_forcing(arch):
+    """Decode 4 tokens one-by-one == 4 separate teacher-forced prefills."""
+    cfg = _cfg(arch, False)
+    key = jax.random.key(2)
+    params = init_params(key, cfg)
+    N = 4
+    toks = jax.random.randint(key, (B, S + N), 0, cfg.vocab_size)
+    st = forward(params, cfg, {"tokens": toks[:, :S]}, mode="prefill",
+                 max_len=S + N)["states"]
+    for j in range(N):
+        dec = forward(params, cfg, {"tokens": toks[:, S + j:S + j + 1]},
+                      mode="decode", states=st)
+        st = dec["states"]
+        full = forward(params, cfg, {"tokens": toks[:, :S + j + 1]},
+                       mode="prefill")["last_logits"]
+        err = float(jnp.max(jnp.abs(full - dec["logits"])))
+        assert err < 2e-3, (arch, j, err)
+
+
+def test_windowed_ring_buffer_wraps_correctly():
+    """Sliding-window arch: decode past the window must equal a fresh
+    prefill over the last W tokens (ring-buffer correctness)."""
+    cfg = _cfg("mixtral-8x22b", False)   # reduced window = 64
+    W = cfg.sliding_window
+    assert W == 64
+    key = jax.random.key(3)
+    params = init_params(key, cfg)
+    total = W + 24
+    toks = jax.random.randint(key, (B, total), 0, cfg.vocab_size)
+    # prefill W, then decode 24 steps so the ring wraps
+    st = forward(params, cfg, {"tokens": toks[:, :W]}, mode="prefill",
+                 max_len=total)["states"]
+    for j in range(W, total - 1):
+        st = forward(params, cfg, {"tokens": toks[:, j:j + 1]},
+                     mode="decode", states=st)["states"]
+    dec = forward(params, cfg, {"tokens": toks[:, -1:]}, mode="decode",
+                  states=st)["logits"]
+    full = forward(params, cfg, {"tokens": toks}, mode="prefill")
+    err = float(jnp.max(jnp.abs(full["last_logits"] - dec)))
+    assert err < 2e-2, err

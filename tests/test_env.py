@@ -1,0 +1,112 @@
+"""Property-based tests on the AIGC edge environment invariants
+(paper Eqns 2-4): queues never go negative, delays decompose exactly,
+masked tasks are inert, and local processing is consistent."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import env as envlib
+
+PARAMS = envlib.EnvParams(num_bs=4, num_slots=3, max_tasks=4)
+
+
+def _episode(seed: int):
+    return envlib.sample_episode(jax.random.key(seed), PARAMS)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       actions=st.lists(st.integers(0, 3), min_size=4, max_size=4))
+def test_delay_decomposition(seed, actions):
+    """task_delays == transmission + compute + wait, computed by hand."""
+    ep = _episode(seed)
+    qs = envlib.init_queues(PARAMS)
+    a = jnp.array(actions, jnp.int32)
+    t, n = 0, 0
+    delays = np.asarray(envlib.task_delays(PARAMS, ep, qs, t, n, a))
+    for b in range(PARAMS.num_bs):
+        tgt = actions[b]
+        d = float(ep.d[t, n, b])
+        wl = float(ep.rho[t, n, b] * ep.z[t, n, b])
+        f = float(ep.f[tgt])
+        manual = (d / float(ep.v_up[t, n, b])
+                  + float(ep.d_out[t, n, b]) / float(ep.v_down[t, n, b])
+                  + wl / f
+                  + (float(qs.q_prev[tgt]) + float(qs.q_bef[tgt])) / f)
+        assert abs(delays[b] - manual) < 1e-4
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_queue_never_negative_and_eqn4(seed):
+    ep = _episode(seed)
+    qs = envlib.init_queues(PARAMS)
+    key = jax.random.key(seed + 1)
+    for t in range(PARAMS.num_slots):
+        for n in range(PARAMS.max_tasks):
+            key, k = jax.random.split(key)
+            a = jax.random.randint(k, (PARAMS.num_bs,), 0, PARAMS.num_bs)
+            qs = envlib.apply_actions(PARAMS, ep, qs, t, n, a)
+        before = np.asarray(qs.q_prev + qs.q_bef)
+        qs = envlib.end_slot(PARAMS, ep, qs)
+        after = np.asarray(qs.q_prev)
+        assert (after >= -1e-6).all()
+        # Eqn (4): q_t = max(q_{t-1} + placed - f*Delta, 0)
+        expected = np.maximum(
+            before - np.asarray(ep.f) * PARAMS.slot_seconds, 0.0)
+        np.testing.assert_allclose(after, expected, atol=1e-5)
+        assert float(jnp.abs(qs.q_bef).max()) == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_masked_tasks_add_no_workload(seed):
+    ep = _episode(seed)
+    # force all tasks of slot 0 task-index >= 1 to be masked
+    mask = np.asarray(ep.mask).copy()
+    mask[0, 1:, :] = 0.0
+    ep = ep._replace(mask=jnp.asarray(mask))
+    qs = envlib.init_queues(PARAMS)
+    a = jnp.zeros((PARAMS.num_bs,), jnp.int32)
+    qs1 = envlib.apply_actions(PARAMS, ep, qs, 0, 1, a)
+    np.testing.assert_allclose(np.asarray(qs1.q_bef),
+                               np.asarray(qs.q_bef))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_state_vector_layout(seed):
+    ep = _episode(seed)
+    qs = envlib.QueueState(
+        q_prev=jnp.arange(PARAMS.num_bs, dtype=jnp.float32),
+        q_bef=jnp.zeros((PARAMS.num_bs,)))
+    s = envlib.observe(PARAMS, qs, ep.d[0, 0],
+                       ep.rho[0, 0] * ep.z[0, 0])
+    assert s.shape == (PARAMS.num_bs, PARAMS.state_dim)
+    np.testing.assert_allclose(np.asarray(s[:, 0]),
+                               np.asarray(ep.d[0, 0]))
+    # every BS sees the same global queue vector (Eqn 6)
+    np.testing.assert_allclose(np.asarray(s[:, 2:]),
+                               np.tile(np.arange(PARAMS.num_bs),
+                                       (PARAMS.num_bs, 1)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_faster_server_never_slower_when_idle(seed):
+    """With empty queues, offloading to a strictly faster ES with equal
+    rates gives strictly smaller compute+wait delay."""
+    ep = _episode(seed)
+    f = np.asarray(ep.f)
+    fastest = int(np.argmax(f))
+    slowest = int(np.argmin(f))
+    if fastest == slowest:
+        return
+    qs = envlib.init_queues(PARAMS)
+    a_fast = jnp.full((PARAMS.num_bs,), fastest, jnp.int32)
+    a_slow = jnp.full((PARAMS.num_bs,), slowest, jnp.int32)
+    d_fast = np.asarray(envlib.task_delays(PARAMS, ep, qs, 0, 0, a_fast))
+    d_slow = np.asarray(envlib.task_delays(PARAMS, ep, qs, 0, 0, a_slow))
+    assert (d_fast <= d_slow + 1e-6).all()

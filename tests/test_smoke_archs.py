@@ -1,0 +1,100 @@
+"""Per-architecture smoke tests (REQUIRED by the assignment).
+
+For each of the 10 assigned architectures: instantiate the REDUCED variant
+of the same family (2 layers, d_model <= 512, <= 4 experts) and run one
+forward and one train step on CPU, asserting output shapes and no NaNs.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, reduced
+from repro.models import forward, init_params
+from repro.train import optimizer as opt_lib
+from repro.train.steps import make_train_step
+
+B, S = 2, 48
+
+
+def _batch(cfg, key):
+    inputs = {}
+    text = S
+    if cfg.vision_patches:
+        text = S - cfg.vision_patches
+        inputs["patches"] = jax.random.normal(
+            key, (B, cfg.vision_patches, cfg.vision_dim))
+    if cfg.num_codebooks:
+        toks = jax.random.randint(key, (B, cfg.num_codebooks, text + 1), 0,
+                                  cfg.vocab_size)
+        inputs["tokens"] = toks[..., :-1]
+        inputs["labels"] = toks[..., 1:]
+    else:
+        toks = jax.random.randint(key, (B, text + 1), 0, cfg.vocab_size)
+        inputs["tokens"] = toks[:, :-1]
+        if cfg.vision_patches:
+            lab = jnp.zeros((B, S), jnp.int32)
+            lab = lab.at[:, cfg.vision_patches:].set(toks[:, 1:text + 1])
+            mask = jnp.zeros((B, S))
+            mask = mask.at[:, cfg.vision_patches:].set(1.0)
+            inputs["labels"] = lab
+            inputs["mask"] = mask
+        else:
+            inputs["labels"] = toks[:, 1:]
+    return inputs
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.key(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch, key):
+    cfg = dataclasses.replace(reduced(get_config(arch)), vision_patches=16
+                              if get_config(arch).vision_patches else 0)
+    inputs = _batch(cfg, key)
+    out = forward(init_params(key, cfg), cfg, inputs, mode="train")
+    h = out["hidden"]
+    expected_seq = inputs["tokens"].shape[-1] + (cfg.vision_patches or 0)
+    assert h.shape == (B, expected_seq, cfg.d_model)
+    assert bool(jnp.isfinite(h).all())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch, key):
+    cfg = dataclasses.replace(reduced(get_config(arch)), vision_patches=16
+                              if get_config(arch).vision_patches else 0)
+    params = init_params(key, cfg)
+    opt_state = opt_lib.init(params)
+    step = make_train_step(cfg, opt_lib.AdamWConfig(learning_rate=1e-3,
+                                                    warmup_steps=1,
+                                                    total_steps=10))
+    batch = _batch(cfg, key)
+    new_params, new_opt, metrics = step(params, opt_state, batch)
+    loss = float(metrics["loss"])
+    assert jnp.isfinite(loss), arch
+    assert loss > 0
+    # params actually moved
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, new_params)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+    # everything stays finite
+    for leaf in jax.tree_util.tree_leaves(new_params):
+        assert bool(jnp.isfinite(leaf.astype(jnp.float32)).all()), arch
+
+
+@pytest.mark.parametrize("arch", ["xlstm-350m", "recurrentgemma-9b",
+                                  "mixtral-8x22b"])
+def test_subquadratic_decode_state_is_bounded(arch, key):
+    """Decode state must not grow with the logical sequence position."""
+    from repro.models import init_layer_states
+    cfg = reduced(get_config(arch))
+    st_small = init_layer_states(cfg, 2, 64)
+    st_large = init_layer_states(cfg, 2, 4096)
+    sizes = lambda st: sorted(  # noqa: E731
+        x.size for x in jax.tree_util.tree_leaves(st))
+    assert sizes(st_small) == sizes(st_large)
