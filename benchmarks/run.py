@@ -14,6 +14,8 @@ Mapping to the paper:
   fig7b    -> Fig. 7b  delay vs number of BSs
   fig8     -> Fig. 8   denoising steps I / entropy temperature alpha
   tablev   -> Table V  centralized vs distributed serving makespan
+  closedloop -> (systems) Poisson trace through N live continuous-batching
+              engines under LAD-TS vs baselines (mean/p95 service delay)
   kernels  -> (systems) Pallas kernel microbenches
   roofline -> (systems) dry-run roofline terms per (arch x shape x mesh)
 """
@@ -29,7 +31,7 @@ def main() -> None:
     ap.add_argument("--scale", choices=["quick", "paper"], default="quick")
     ap.add_argument("--only", default=None,
                     help="comma list: fig5,fig6a,fig6b,fig7a,fig7b,fig8,"
-                         "tablev,kernels,roofline")
+                         "tablev,closedloop,kernels,roofline")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -65,6 +67,9 @@ def main() -> None:
     if want("tablev"):
         from benchmarks.serving import bench_tablev
         rows += bench_tablev()
+    if want("closedloop"):
+        from benchmarks.serving import bench_closed_loop
+        rows += bench_closed_loop(args.scale)
     if want("kernels"):
         from benchmarks.kernels import bench_kernels
         rows += bench_kernels()

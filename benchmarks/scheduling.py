@@ -42,14 +42,22 @@ def agent_cfg(scale: str, **overrides) -> AgentConfig:
 
 def convergence_episode(delays: List[float], tol: float = 0.05) -> int:
     """First episode from which the delay stays within tol of the final
-    plateau (the paper's 'converged after N episodes' metric)."""
-    arr = np.asarray(delays)
-    plateau = arr[-max(3, len(arr) // 5):].mean()
+    plateau (the paper's 'converged after N episodes' metric).
+
+    Robust to degenerate inputs: empty / single-episode curves return 0,
+    and the plateau window never exceeds the curve length, so short runs
+    (< 3 episodes) don't wrap the slice around."""
+    arr = np.asarray(delays, dtype=np.float64)
+    if arr.size == 0:
+        return 0
+    win = min(arr.size, max(3, arr.size // 5))
+    plateau = arr[-win:].mean()
+    band = tol * max(abs(plateau), 1e-12)
     for i, d in enumerate(arr):
-        if abs(d - plateau) <= tol * plateau and \
-                (np.abs(arr[i:] - plateau) <= 3 * tol * plateau).mean() > 0.7:
+        if abs(d - plateau) <= band and \
+                (np.abs(arr[i:] - plateau) <= 3 * band).mean() > 0.7:
             return i
-    return len(arr) - 1
+    return arr.size - 1
 
 
 def bench_fig5_learning(scale: str, seed: int = 0) -> List[str]:

@@ -1,86 +1,136 @@
-"""Table-V analog: total generation delay, centralized vs DEdgeAI-style
-distributed serving with scheduling, at smoke scale.
+"""Serving benchmarks on the cluster API.
 
-The paper's Table V compares wall-clock generation delay of 5 cloud
-platforms vs DEdgeAI (5 Jetsons + LAD-TS) for |N| = 1..1000 requests.
-Here: reduced models on CPU, a "cloud" = single fast engine with one
-queue, vs an "edge cluster" = E engines with heterogeneous speeds + the
-scheduler placing each request on the queue-aware best engine.
+``bench_tablev``       — Table-V analog: total generation delay, centralized
+                         vs DEdgeAI-style distributed serving, smoke scale.
+``bench_closed_loop``  — the repo's first apples-to-apples "paper policy vs
+                         baselines on real engines" number: a Poisson
+                         arrival trace replayed through N continuous-
+                         batching engines under each scheduler, reporting
+                         mean / p95 service delay per scheduler, plus the
+                         same schedulers evaluated in the ``core.env``
+                         simulator through the identical interface.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import List
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
+from repro.cluster import (EdgeCluster, PolicyScheduler, evaluate_scheduler,
+                           make_scheduler, poisson_trace, summarize)
 from repro.configs import get_config, reduced
-from repro.models.transformer import init_params
-from repro.serving.engine import ServeEngine
-
-
-def _make_engine(arch: str, num_layers: int, seed: int,
-                 max_len: int) -> ServeEngine:
-    cfg = dataclasses.replace(reduced(get_config(arch)),
-                              num_layers=num_layers)
-    params = init_params(jax.random.key(seed), cfg)
-    return ServeEngine(cfg, params, max_len=max_len)
+from repro.core.agents import AgentConfig
+from repro.core.diffusion import DiffusionPolicyConfig
+from repro.core.env import EnvParams
+from repro.core.trainer import train_method
+from repro.serving.builders import build_engines, warmup
 
 
 def bench_tablev(num_requests=(1, 8, 32), prompt_len: int = 16,
                  gen_tokens: int = 8, n_edge: int = 4) -> List[str]:
-    key = jax.random.key(0)
+    """Centralized (one deep engine) vs edge cluster (n_edge shallow
+    engines + JSQ placement), makespan per request count."""
     max_len = prompt_len + gen_tokens
-    # cloud: one deep (2x layers) engine; edge: n_edge shallow engines with
-    # heterogeneous depth (speed proxy)
-    cloud = _make_engine("qwen2-1.5b", 4, 0, max_len)
-    edges = [_make_engine("qwen2-1.5b", 2 + (i % 2), i + 1, max_len)
-             for i in range(n_edge)]
+    cloud = build_engines("qwen2-1.5b", 1, max_len, depths=[4])[0]
+    edges = build_engines("qwen2-1.5b", n_edge, max_len,
+                          depths=[2 + (i % 2) for i in range(n_edge)],
+                          seed0=1)
     vocab = reduced(get_config("qwen2-1.5b")).vocab_size
-
-    # warm up jit compiles so makespans reflect steady-state serving
-    warm = jax.random.randint(key, (1, prompt_len), 0, vocab)
-    cloud.generate(warm, 1)
-    for e in edges:
-        e.generate(warm, 1)
+    warmup([cloud] + edges, prompt_len)
 
     rows = []
     for N in num_requests:
-        prompts = [jax.random.randint(jax.random.fold_in(key, r),
-                                      (1, prompt_len), 0, vocab)
-                   for r in range(N)]
-        # centralized: all requests through the single cloud engine (FCFS)
-        cloud._busy_until = 0.0
-        t0 = time.time()
-        makespan_cloud = 0.0
-        for pr in prompts:
-            res = cloud.generate(pr, gen_tokens)
-            makespan_cloud += res.prefill_s + res.decode_s
-        wall_cloud = time.time() - t0
+        def trace():
+            return poisson_trace(N, rate=1e6, prompt_len=prompt_len,
+                                 max_new_tokens=gen_tokens,
+                                 min_new_tokens=gen_tokens,
+                                 vocab_size=vocab, num_origins=n_edge,
+                                 seed=N)
 
-        # distributed: queue-aware greedy placement (Opt-TS style, the
-        # scheduler's serving-side role)
+        # centralized: every request through the single cloud engine
+        cloud.reset()
+        central = EdgeCluster([cloud], make_scheduler("round-robin", 1))
+        t0 = time.monotonic()
+        stats_c = summarize(central.run(trace()))
+        wall_cloud = time.monotonic() - t0
+
+        # distributed: queue-aware placement over the edge cluster
         for e in edges:
-            e._busy_until = 0.0
-        busy = [0.0] * len(edges)
-        t0 = time.time()
-        per_engine_time = [0.0] * len(edges)
-        for pr in prompts:
-            i = int(np.argmin(busy))
-            res = edges[i].generate(pr, gen_tokens)
-            busy[i] += res.prefill_s + res.decode_s
-            per_engine_time[i] = busy[i]
-        makespan_edge = max(per_engine_time) if per_engine_time else 0.0
-        wall_edge = time.time() - t0
+            e.reset()
+        edge = EdgeCluster(edges, make_scheduler("jsq", n_edge))
+        t0 = time.monotonic()
+        stats_e = summarize(edge.run(trace()))
+        wall_edge = time.monotonic() - t0
 
-        speedup = makespan_cloud / max(makespan_edge, 1e-9)
+        speedup = wall_cloud / max(wall_edge, 1e-9)
         rows.append(
             f"tableV_N={N}/centralized,{wall_cloud/max(N,1)*1e6:.0f},"
-            f"makespan={makespan_cloud:.2f}s")
+            f"mean={stats_c['mean_s']:.3f}s;p95={stats_c['p95_s']:.3f}s")
         rows.append(
             f"tableV_N={N}/dedgeai,{wall_edge/max(N,1)*1e6:.0f},"
-            f"makespan={makespan_edge:.2f}s;speedup={speedup:.2f}x")
+            f"mean={stats_e['mean_s']:.3f}s;p95={stats_e['p95_s']:.3f}s;"
+            f"speedup={speedup:.2f}x")
+    return rows
+
+
+def bench_closed_loop(scale: str = "quick", n_edge: int = 4,
+                      num_requests: int = 24, rate: float = 8.0,
+                      prompt_len: int = 16, gen_tokens: int = 8,
+                      seed: int = 0) -> List[str]:
+    """Closed loop: train LAD-TS in the sim, then replay one Poisson trace
+    through the live cluster under the paper policy and each baseline."""
+    paper = scale == "paper"
+    p = EnvParams(num_bs=n_edge, num_slots=30 if paper else 8,
+                  max_tasks=12 if paper else 6)
+    acfg = AgentConfig(train_after=120 if paper else 40,
+                       replay_capacity=500 if paper else 200,
+                       diffusion=DiffusionPolicyConfig(
+                           num_steps=5 if paper else 3))
+    episodes = 20 if paper else 3
+    _, states = train_method("lad-ts", p, acfg, episodes=episodes,
+                             key=jax.random.key(seed))
+
+    def scheds():
+        return {
+            "lad-ts": PolicyScheduler("lad-ts", acfg, states,
+                                      num_engines=n_edge,
+                                      n_max=p.max_tasks),
+            "jsq": make_scheduler("jsq", n_edge),
+            "round-robin": make_scheduler("round-robin", n_edge),
+            "random": make_scheduler("random", n_edge),
+            "local": make_scheduler("local", n_edge),
+        }
+
+    rows = []
+    # --- same Scheduler interface against the core.env simulator ----------
+    for name, s in scheds().items():
+        t0 = time.monotonic()
+        r = evaluate_scheduler(s, p, episodes=2, key=jax.random.key(1))
+        us = (time.monotonic() - t0) / max(r["count"], 1) * 1e6
+        rows.append(f"closedloop_sim/{name},{us:.0f},"
+                    f"mean={r['mean_s']:.3f}s;p95={r['p95_s']:.3f}s")
+
+    # --- and against the live engines --------------------------------------
+    mcfg = reduced(get_config("qwen2-1.5b"))
+    max_len = prompt_len + gen_tokens
+    engines = build_engines("qwen2-1.5b", n_edge, max_len,
+                            depths=[2 + (i % 2) for i in range(n_edge)],
+                            seed0=1)
+    warmup(engines, prompt_len)
+    for name, s in scheds().items():
+        for e in engines:
+            e.reset()
+        cluster = EdgeCluster(engines, s, seed=seed)
+        trace = poisson_trace(num_requests, rate=rate,
+                              prompt_len=prompt_len,
+                              max_new_tokens=gen_tokens,
+                              vocab_size=mcfg.vocab_size,
+                              num_origins=n_edge, seed=seed + 1)
+        t0 = time.monotonic()
+        stats = summarize(cluster.run(trace))
+        us = (time.monotonic() - t0) / max(stats["count"], 1) * 1e6
+        rows.append(f"closedloop_live/{name},{us:.0f},"
+                    f"mean={stats['mean_s']:.3f}s;"
+                    f"p95={stats['p95_s']:.3f}s")
     return rows

@@ -1,58 +1,27 @@
 """End-to-end DEdgeAI driver: a heterogeneous edge cluster serving real
-(reduced-config) model inference, with the scheduler placing each request.
+(reduced-config) model inference through the ``repro.cluster`` API.
 
     PYTHONPATH=src python examples/serve_edge.py --requests 12
 
 This is the paper's Fig. 10 worker loop at smoke scale:
-  1. N_edge ServeEngines with different depths (speed heterogeneity),
-     each running a REAL reduced transformer (prefill + decode with cache).
-  2. Requests arrive in bursts; the queue-aware scheduler (the same
-     decision rule LAD-TS learns towards) picks an ES per request.
-  3. Reported per-request delay = queue + prefill + decode, i.e. the
-     serving-side terms of Eqn (2); round-robin is the ablation.
+  1. N_edge continuous-batching ServeEngines with different depths (speed
+     heterogeneity), each running a REAL reduced transformer (per-request
+     prefill + slot-pool decode with mid-flight joins).
+  2. Requests arrive as a Poisson trace; the pluggable Scheduler
+     (join-shortest-queue, round-robin, random, local-only — the same
+     interface the trained LAD-TS policy plugs into) picks an ES each.
+  3. Reported per-request delay = measured queue + prefill + decode, the
+     serving-side terms of Eqn (2).
 """
 import argparse
 import sys
 import time
 
-import jax
-import numpy as np
-
 sys.path.insert(0, "src")
 
-import dataclasses                                    # noqa: E402
-
-from repro.configs import get_config, reduced         # noqa: E402
-from repro.models.transformer import init_params      # noqa: E402
-from repro.serving.engine import ServeEngine          # noqa: E402
-
-
-def build_cluster(n_edge, arch, prompt_len, gen_tokens):
-    engines = []
-    for i in range(n_edge):
-        cfg = dataclasses.replace(reduced(get_config(arch)),
-                                  num_layers=2 + 2 * (i % 2))
-        params = init_params(jax.random.key(i), cfg)
-        engines.append(ServeEngine(cfg, params,
-                                   max_len=prompt_len + gen_tokens))
-    return engines
-
-
-def run(engines, prompts, gen_tokens, policy: str):
-    for e in engines:
-        e._busy_until = 0.0
-    busy = np.zeros(len(engines))
-    delays = []
-    for i, pr in enumerate(prompts):
-        if policy == "queue-aware":
-            tgt = int(np.argmin(busy))
-        else:  # round-robin
-            tgt = i % len(engines)
-        res = engines[tgt].generate(pr, gen_tokens)
-        service = busy[tgt] + res.prefill_s + res.decode_s
-        busy[tgt] = service
-        delays.append(service)
-    return float(np.mean(delays)), float(np.max(busy))
+from repro.cluster import (EdgeCluster, make_scheduler,  # noqa: E402
+                           poisson_trace, summarize)
+from repro.serving.builders import build_engines, warmup  # noqa: E402
 
 
 def main():
@@ -62,26 +31,33 @@ def main():
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=8)
+    ap.add_argument("--kv-slots", type=int, default=4)
+    ap.add_argument("--rate", type=float, default=8.0)
     args = ap.parse_args()
 
-    engines = build_cluster(args.edges, args.arch, args.prompt_len,
-                            args.tokens)
-    cfg0 = engines[0].cfg
-    key = jax.random.key(0)
-    prompts = [jax.random.randint(jax.random.fold_in(key, r),
-                                  (1, args.prompt_len), 0, cfg0.vocab_size)
-               for r in range(args.requests)]
+    engines = build_engines(args.arch, args.edges,
+                            args.prompt_len + args.tokens,
+                            kv_slots=args.kv_slots)
+    vocab = engines[0].cfg.vocab_size
 
     # warm up compiles so timings reflect steady-state serving
-    for e in engines:
-        e.generate(prompts[0], 1)
+    warmup(engines, args.prompt_len)
 
-    for policy in ("queue-aware", "round-robin"):
+    for policy in ("jsq", "round-robin", "random", "local"):
+        for e in engines:
+            e.reset()
+        cluster = EdgeCluster(engines, make_scheduler(policy, args.edges))
+        trace = poisson_trace(args.requests, rate=args.rate,
+                              prompt_len=args.prompt_len,
+                              max_new_tokens=args.tokens,
+                              vocab_size=vocab, num_origins=args.edges,
+                              seed=42)
         t0 = time.time()
-        avg, makespan = run(engines, prompts, args.tokens, policy)
-        print(f"{policy:12s}: avg service delay {avg*1e3:7.1f} ms  "
-              f"makespan {makespan*1e3:7.1f} ms  "
-              f"(wall {time.time()-t0:.1f}s)")
+        stats = summarize(cluster.run(trace))
+        print(f"{policy:12s}: mean service delay "
+              f"{stats['mean_s']*1e3:7.1f} ms  "
+              f"p95 {stats['p95_s']*1e3:7.1f} ms  "
+              f"(n={stats['count']}, wall {time.time()-t0:.1f}s)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""Edge-cluster scheduling layer: one Scheduler interface, two backends.
+
+  * ``request``    — Request lifecycle (arrival, demand, per-phase
+                     timestamps) + Poisson trace generation.
+  * ``schedulers`` — the Scheduler protocol; trained-policy wrapper
+                     (LAD-TS / D2SAC-TS / SAC-TS / DQN-TS) and non-learned
+                     baselines (round-robin, JSQ, random, local-only).
+  * ``simulate``   — run a Scheduler inside the jitted ``core.env`` scan.
+  * ``live``       — run the SAME Scheduler against a cluster of
+                     continuous-batching ``ServeEngine`` workers.
+"""
+from repro.cluster.live import EdgeCluster, LiveObsConfig
+from repro.cluster.request import Request, poisson_trace, summarize
+from repro.cluster.schedulers import (BASELINES, JoinShortestQueueScheduler,
+                                      LocalOnlyScheduler, PolicyScheduler,
+                                      RandomScheduler, RoundRobinScheduler,
+                                      Scheduler, make_scheduler)
+from repro.cluster.simulate import build_sim_episode, evaluate_scheduler
+
+__all__ = [
+    "BASELINES", "EdgeCluster", "JoinShortestQueueScheduler",
+    "LiveObsConfig", "LocalOnlyScheduler", "PolicyScheduler",
+    "RandomScheduler", "Request", "RoundRobinScheduler", "Scheduler",
+    "build_sim_episode", "evaluate_scheduler", "make_scheduler",
+    "poisson_trace", "summarize",
+]

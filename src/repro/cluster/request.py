@@ -1,0 +1,114 @@
+"""Request lifecycle type shared by the simulator and the live engines.
+
+A :class:`Request` is the serving-side twin of one AIGC task (paper
+Eqn 2): the prompt is the uploaded input d_n, ``max_new_tokens`` is the
+quality demand z_n (denoising steps / tokens to generate), and the four
+timestamps decompose the measured service delay exactly:
+
+    queue_s   = t_prefill_start - t_enqueue        (T_wait, Eqn 3)
+    prefill_s = t_prefill_end   - t_prefill_start  (input compute)
+    decode_s  = t_finish        - t_prefill_end    (generation compute)
+    total_s   = queue_s + prefill_s + decode_s     (== t_finish - t_enqueue)
+
+``arrival_s`` is the request's offset in a replayed trace; ``t_arrival``
+is stamped by the closed-loop driver so ``service_s`` additionally counts
+any scheduler-side wait before the engine ever saw the request.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: Any                       # (1, S) tokens or (1, K, S) audio
+    max_new_tokens: int
+    arrival_s: float = 0.0            # trace-relative arrival offset
+    origin: int = 0                   # home BS / edge index
+    patches: Any = None               # (1, P, D) vision patches or None
+
+    # lifecycle (engine clock, absolute seconds) ---------------------------
+    t_arrival: Optional[float] = None       # stamped by the cluster driver
+    t_enqueue: Optional[float] = None       # admitted to an engine queue
+    t_prefill_start: Optional[float] = None
+    t_prefill_end: Optional[float] = None
+    t_finish: Optional[float] = None
+
+    engine_id: Optional[int] = None
+    tokens: List[np.ndarray] = dataclasses.field(default_factory=list)
+
+    # ------------------------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return self.t_finish is not None
+
+    @property
+    def queue_s(self) -> float:
+        return self.t_prefill_start - self.t_enqueue
+
+    @property
+    def prefill_s(self) -> float:
+        return self.t_prefill_end - self.t_prefill_start
+
+    @property
+    def decode_s(self) -> float:
+        return self.t_finish - self.t_prefill_end
+
+    @property
+    def total_s(self) -> float:
+        """Engine-side service delay (== queue_s+prefill_s+decode_s)."""
+        return self.t_finish - self.t_enqueue
+
+    @property
+    def service_s(self) -> float:
+        """End-to-end delay from trace arrival (falls back to total_s)."""
+        t0 = self.t_arrival if self.t_arrival is not None else self.t_enqueue
+        return self.t_finish - t0
+
+
+def poisson_trace(num_requests: int, rate: float, prompt_len: int,
+                  max_new_tokens: int, vocab_size: int, *,
+                  num_origins: int = 1, min_new_tokens: int = 1,
+                  num_codebooks: int = 0, seed: int = 0) -> List[Request]:
+    """Poisson arrival trace with heterogeneous decode demand.
+
+    Inter-arrival times are Exp(rate); the per-request generation length is
+    U[min_new_tokens, max_new_tokens] — the z_n quality-demand analog that
+    makes continuous batching matter (short requests should overtake long
+    ones mid-flight).  Prompt length is fixed so one prefill compile serves
+    the whole trace.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for r in range(num_requests):
+        t += float(rng.exponential(1.0 / max(rate, 1e-9)))
+        shape = ((1, num_codebooks, prompt_len) if num_codebooks
+                 else (1, prompt_len))
+        prompt = jax.random.randint(jax.random.key(seed * 100_003 + r),
+                                    shape, 0, vocab_size, jnp.int32)
+        reqs.append(Request(
+            rid=r, prompt=prompt,
+            max_new_tokens=int(rng.integers(min_new_tokens,
+                                            max_new_tokens + 1)),
+            arrival_s=t,
+            origin=int(rng.integers(0, num_origins))))
+    return reqs
+
+
+def summarize(requests: List[Request]) -> dict:
+    """Mean / p95 / max service delay over completed requests."""
+    delays = np.asarray([r.service_s for r in requests if r.done])
+    if delays.size == 0:
+        return {"count": 0, "mean_s": 0.0, "p95_s": 0.0, "max_s": 0.0}
+    return {"count": int(delays.size),
+            "mean_s": float(delays.mean()),
+            "p95_s": float(np.percentile(delays, 95)),
+            "max_s": float(delays.max())}

@@ -1,0 +1,163 @@
+"""Pluggable edge-cluster schedulers: one interface, two backends.
+
+A :class:`Scheduler` maps the paper's Eqn-6 observation rows
+``s = [d_n, rho_n*z_n, q_1..q_E]`` (normalised) to target-engine indices.
+Implementations are pure-JAX over an explicit ``carry`` pytree so ONE
+scheduler object can drive either
+
+  * the jitted ``repro.core.env`` episode scan (``repro.cluster.simulate``
+    vectorises ``select`` over the B base stations inside ``lax.scan``), or
+  * a live cluster of continuous-batching ``ServeEngine`` workers
+    (``repro.cluster.live`` calls ``select_one`` per arriving request).
+
+``PolicyScheduler`` wraps the trained LAD-TS / D2SAC-TS / SAC-TS / DQN-TS
+agent states from ``repro.core.agents`` unmodified; the rest are the
+non-learned baselines (round-robin, join-shortest-queue, random,
+local-only) the paper ablates against.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import agents as ag
+from repro.core.trainer import LEARNED, make_agent_fns
+
+Carry = Any
+
+
+class Scheduler:
+    """Base: stateless-by-default scheduler over ``num_engines`` targets."""
+
+    name = "base"
+
+    def __init__(self, num_engines: int):
+        self.num_engines = num_engines
+
+    # -- JAX-traceable batch interface (one row per origin BS) -------------
+    def init_carry(self) -> Carry:
+        return jnp.zeros((), jnp.int32)
+
+    def select(self, carry: Carry, s: jnp.ndarray, n, key
+               ) -> Tuple[jnp.ndarray, Carry]:
+        """s (B, state_dim) -> ((B,) int32 engine indices, carry)."""
+        raise NotImplementedError
+
+    # -- per-request interface for the live cluster ------------------------
+    def select_one(self, carry: Carry, s_row: jnp.ndarray, origin: int,
+                   n: int, key) -> Tuple[int, Carry]:
+        a, carry = self.select(carry, s_row[None, :], n, key)
+        return int(a[0]), carry
+
+
+class RoundRobinScheduler(Scheduler):
+    name = "round-robin"
+
+    def select(self, carry, s, n, key):
+        B = s.shape[0]
+        a = (carry + jnp.arange(B)) % self.num_engines
+        return a.astype(jnp.int32), carry + B
+
+
+class RandomScheduler(Scheduler):
+    name = "random"
+
+    def select(self, carry, s, n, key):
+        a = jax.random.randint(key, (s.shape[0],), 0, self.num_engines)
+        return a.astype(jnp.int32), carry
+
+
+class JoinShortestQueueScheduler(Scheduler):
+    """Pick the engine with the smallest queue feature (obs columns 2:)."""
+
+    name = "jsq"
+
+    def select(self, carry, s, n, key):
+        q = s[:, 2:2 + self.num_engines]
+        return jnp.argmin(q, axis=-1).astype(jnp.int32), carry
+
+
+class LocalOnlyScheduler(Scheduler):
+    """Every BS keeps its tasks (no offloading) — the paper's Local-TS."""
+
+    name = "local"
+
+    def select(self, carry, s, n, key):
+        return (jnp.arange(s.shape[0]) % self.num_engines).astype(jnp.int32), \
+            carry
+
+    def select_one(self, carry, s_row, origin, n, key):
+        return int(origin) % self.num_engines, carry
+
+
+class PolicyScheduler(Scheduler):
+    """Trained ``repro.core.agents`` policy behind the Scheduler interface.
+
+    ``states`` is the per-BS *stacked* agent pytree exactly as returned by
+    ``repro.core.trainer.train_method`` — one agent per origin BS, vmapped
+    for batch decisions (the paper's distributed deployment).  The latent
+    action store (LAD-TS) keeps evolving inside the carry, so serving
+    decisions keep self-conditioning the diffusion chain.
+    """
+
+    def __init__(self, method: str, cfg: ag.AgentConfig, states,
+                 num_engines: int, n_max: int, greedy: bool = False):
+        if method not in LEARNED:
+            raise ValueError(f"{method!r} is not a learned method")
+        super().__init__(num_engines)
+        self.name = method
+        self.method = method
+        self.cfg = cfg
+        self.states = states
+        self.n_max = int(n_max)
+        self.greedy = greedy
+        _, act, _, _, _ = make_agent_fns(method, cfg)
+        self._act = act
+        self._vact = jax.vmap(act, in_axes=(0, 0, None, 0, None))
+        self._sel1 = None
+
+    def init_carry(self):
+        return self.states
+
+    def select(self, carry, s, n, key):
+        keys = jax.random.split(key, s.shape[0])
+        a, _, carry = self._vact(carry, s, n % self.n_max, keys, self.greedy)
+        return (a % self.num_engines).astype(jnp.int32), carry
+
+    def select_one(self, carry, s_row, origin, n, key):
+        if self._sel1 is None:
+            greedy = self.greedy
+
+            def sel1(carry, s_row, origin, n, key):
+                st = jax.tree_util.tree_map(lambda x: x[origin], carry)
+                a, _, st = self._act(st, s_row, n, key, greedy)
+                carry = jax.tree_util.tree_map(
+                    lambda full, one: full.at[origin].set(one), carry, st)
+                return (a % self.num_engines).astype(jnp.int32), carry
+
+            self._sel1 = jax.jit(sel1)
+        a, carry = self._sel1(carry, s_row, jnp.int32(origin),
+                              jnp.int32(n % self.n_max), key)
+        return int(a), carry
+
+
+BASELINES = ("round-robin", "jsq", "random", "local")
+
+
+def make_scheduler(name: str, num_engines: int, **policy_kwargs) -> Scheduler:
+    """Factory: baseline by name, or a learned method given agent states."""
+    if name == "round-robin":
+        return RoundRobinScheduler(num_engines)
+    if name == "jsq":
+        return JoinShortestQueueScheduler(num_engines)
+    if name == "random":
+        return RandomScheduler(num_engines)
+    if name == "local":
+        return LocalOnlyScheduler(num_engines)
+    if name in LEARNED:
+        return PolicyScheduler(name, num_engines=num_engines,
+                               **policy_kwargs)
+    raise ValueError(f"unknown scheduler {name!r}; options: "
+                     f"{BASELINES + LEARNED}")

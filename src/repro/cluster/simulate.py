@@ -1,0 +1,78 @@
+"""Drive any Scheduler against the jitted ``repro.core.env`` episode scan.
+
+This is the evaluation half of the trainer's episode loop: no replay, no
+updates — just the scheduler's ``select`` inside the (T x N x B) scan, with
+queues coupling decisions via Eqn (4).  The same scheduler object (same
+carry pytree) can then be handed to ``repro.cluster.live.EdgeCluster`` and
+placed against real engines.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.schedulers import Scheduler
+from repro.core import env as envlib
+
+
+def build_sim_episode(scheduler: Scheduler, p: envlib.EnvParams) -> Callable:
+    """episode(carry, ep_data, key) -> (carry, delays (T,N,B), mask)."""
+    scale = envlib.state_scale(p)
+
+    def episode(carry, ep: envlib.EpisodeData, key):
+        qs0 = envlib.init_queues(p)
+
+        def task_step(inner, tn):
+            sc, qs, key = inner
+            t, n = tn
+            key, k_sel = jax.random.split(key)
+            d = ep.d[t, n]
+            workload = ep.rho[t, n] * ep.z[t, n]
+            s = envlib.observe(p, qs, d, workload) / scale[None, :]
+            actions, sc = scheduler.select(sc, s, n, k_sel)
+            actions = actions % p.num_bs
+            delays = envlib.task_delays(p, ep, qs, t, n, actions)
+            qs = envlib.apply_actions(p, ep, qs, t, n, actions)
+            return (sc, qs, key), (delays, ep.mask[t, n])
+
+        def slot_step(inner, t):
+            ns = jnp.arange(p.max_tasks)
+            inner, per_task = jax.lax.scan(
+                task_step, inner, (jnp.full_like(ns, t), ns))
+            sc, qs, key = inner
+            qs = envlib.end_slot(p, ep, qs)
+            return (sc, qs, key), per_task
+
+        (sc, _, _), (delays, mask) = jax.lax.scan(
+            slot_step, (carry, qs0, key), jnp.arange(p.num_slots))
+        return sc, delays, mask
+
+    return episode
+
+
+def evaluate_scheduler(scheduler: Scheduler, p: envlib.EnvParams,
+                       episodes: int, key, f: Optional[jnp.ndarray] = None,
+                       carry=None) -> dict:
+    """Mean / p95 service delay of ``scheduler`` over fresh episodes."""
+    episode = jax.jit(build_sim_episode(scheduler, p))
+    key, k_f = jax.random.split(key)
+    if f is None:
+        f = envlib.sample_capacities(k_f, p)
+    if carry is None:
+        carry = scheduler.init_carry()
+    all_delays = []
+    for _ in range(episodes):
+        key, k_ep, k_run = jax.random.split(key, 3)
+        ep_data = envlib.sample_episode(k_ep, p, f=f)
+        carry, delays, mask = episode(carry, ep_data, k_run)
+        d = np.asarray(delays)[np.asarray(mask) > 0]
+        all_delays.append(d)
+    delays = np.concatenate(all_delays) if all_delays else np.zeros((0,))
+    return {"count": int(delays.size),
+            "mean_s": float(delays.mean()) if delays.size else 0.0,
+            "p95_s": float(np.percentile(delays, 95)) if delays.size
+            else 0.0,
+            "carry": carry}

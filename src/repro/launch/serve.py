@@ -1,55 +1,101 @@
-"""Serving launcher: one DEdgeAI-style worker on a reduced model.
+"""Serving launcher: a DEdgeAI-style edge cluster on reduced models.
+
+Replays a Poisson arrival trace through N continuous-batching engines,
+with a pluggable scheduler placing each request:
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
-      --requests 8 --tokens 16
+      --edges 2 --scheduler jsq --requests 8 --tokens 16 --rate 4
+
+``--scheduler lad-ts`` first trains the paper policy in the
+``repro.core.env`` simulator (matching the engine count), then serves
+with it — the closed loop of paper Fig. 10.
 """
 from __future__ import annotations
 
 import argparse
 
 import jax
-import jax.numpy as jnp
 
+from repro.cluster import (EdgeCluster, PolicyScheduler, make_scheduler,
+                           poisson_trace, summarize)
+from repro.cluster.schedulers import BASELINES
 from repro.configs import get_config, reduced
-from repro.models.transformer import init_params
-from repro.serving.engine import ServeEngine
+from repro.core.agents import AgentConfig
+from repro.core.diffusion import DiffusionPolicyConfig
+from repro.core.env import EnvParams
+from repro.core.trainer import LEARNED, train_method
+from repro.serving.builders import build_engines, warmup
+
+
+def build_scheduler(name: str, n_edge: int, train_episodes: int, seed: int):
+    if name in BASELINES:
+        return make_scheduler(name, n_edge)
+    if name not in LEARNED:
+        raise SystemExit(f"unknown scheduler {name!r}; options: "
+                         f"{', '.join(BASELINES + LEARNED)}")
+    p = EnvParams(num_bs=n_edge, num_slots=8, max_tasks=6)
+    acfg = AgentConfig(train_after=40, replay_capacity=200,
+                       diffusion=DiffusionPolicyConfig(num_steps=3))
+    print(f"[serve] training {name} in-sim for {train_episodes} episodes "
+          f"({n_edge} edge servers)...")
+    _, states = train_method(name, p, acfg, episodes=train_episodes,
+                             key=jax.random.key(seed))
+    return PolicyScheduler(name, acfg, states, num_engines=n_edge,
+                           n_max=p.max_tasks)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--edges", type=int, default=2)
+    ap.add_argument("--scheduler", default="jsq",
+                    help="jsq | round-robin | random | local | lad-ts | "
+                         "d2sac-ts | sac-ts | dqn-ts")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="Poisson arrival rate (req/s)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--kv-slots", type=int, default=4)
+    ap.add_argument("--train-episodes", type=int, default=3)
     ap.add_argument("--sample", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = reduced(get_config(args.arch))
-    key = jax.random.key(0)
-    params = init_params(key, cfg)
-    engine = ServeEngine(cfg, params,
-                         max_len=args.prompt_len + args.tokens
-                         + cfg.vision_patches,
-                         sample=args.sample)
+    engines = build_engines(args.arch, args.edges,
+                            args.prompt_len + args.tokens
+                            + reduced(get_config(args.arch)).vision_patches,
+                            kv_slots=args.kv_slots, sample=args.sample)
+    cfg0 = engines[0].cfg
+    vocab = cfg0.vocab_size
+    warmup(engines, args.prompt_len)       # compile before timed serving
 
-    for r in range(args.requests):
-        key, kp = jax.random.split(key)
-        if cfg.num_codebooks:
-            prompt = jax.random.randint(
-                kp, (1, cfg.num_codebooks, args.prompt_len), 0,
-                cfg.vocab_size)
-        else:
-            prompt = jax.random.randint(kp, (1, args.prompt_len), 0,
-                                        cfg.vocab_size)
-        patches = None
-        if cfg.vision_patches:
-            patches = jax.random.normal(
-                kp, (1, cfg.vision_patches, cfg.vision_dim))
-        res = engine.generate(prompt, args.tokens, rng=kp, patches=patches)
-        print(f"[serve] req {r}: prefill={res.prefill_s*1e3:.1f}ms "
-              f"decode={res.decode_s*1e3:.1f}ms "
-              f"queue={res.queue_s*1e3:.1f}ms "
-              f"tok/s={args.tokens/max(res.decode_s,1e-9):.1f}")
+    scheduler = build_scheduler(args.scheduler, args.edges,
+                                args.train_episodes, args.seed)
+    cluster = EdgeCluster(engines, scheduler, seed=args.seed)
+    trace = poisson_trace(args.requests, rate=args.rate,
+                          prompt_len=args.prompt_len,
+                          max_new_tokens=args.tokens, vocab_size=vocab,
+                          num_origins=args.edges, seed=args.seed,
+                          num_codebooks=cfg0.num_codebooks)
+    if cfg0.vision_patches:
+        for r in trace:
+            r.patches = jax.random.normal(
+                jax.random.fold_in(jax.random.key(args.seed), r.rid),
+                (1, cfg0.vision_patches, cfg0.vision_dim))
+    done = cluster.run(trace)
+    for r in sorted(done, key=lambda r: r.rid):
+        tps = (f"tok/s={len(r.tokens)/r.decode_s:.1f}"
+               if r.decode_s > 0 else "tok/s=n/a")
+        print(f"[serve] req {r.rid}: engine={r.engine_id} "
+              f"queue={r.queue_s*1e3:.1f}ms "
+              f"prefill={r.prefill_s*1e3:.1f}ms "
+              f"decode={r.decode_s*1e3:.1f}ms "
+              f"service={r.service_s*1e3:.1f}ms {tps}")
+    st = summarize(done)
+    print(f"[serve] {scheduler.name}: n={st['count']} "
+          f"mean={st['mean_s']*1e3:.1f}ms p95={st['p95_s']*1e3:.1f}ms "
+          f"max={st['max_s']*1e3:.1f}ms")
 
 
 if __name__ == "__main__":

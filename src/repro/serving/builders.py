@@ -1,0 +1,52 @@
+"""Shared engine-cluster construction: one factory + warmup for the
+launcher, the examples, and the benchmarks (so they all measure
+identically configured clusters)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.models.transformer import init_params
+from repro.serving.engine import ServeEngine
+
+
+def default_depths(n_edge: int) -> List[int]:
+    """Heterogeneous layer depths — the cluster's speed diversity."""
+    return [2 + 2 * (i % 2) for i in range(n_edge)]
+
+
+def build_engines(arch: str, n_edge: int, max_len: int, *,
+                  kv_slots: int = 4, sample: bool = False,
+                  depths: Optional[Sequence[int]] = None,
+                  seed0: int = 0) -> List[ServeEngine]:
+    """n_edge reduced-config replicas of ``arch`` with per-engine depth."""
+    depths = list(depths) if depths is not None else default_depths(n_edge)
+    engines = []
+    for i in range(n_edge):
+        cfg = dataclasses.replace(reduced(get_config(arch)),
+                                  num_layers=depths[i])
+        params = init_params(jax.random.key(seed0 + i), cfg)
+        engines.append(ServeEngine(cfg, params, max_len=max_len,
+                                   kv_slots=kv_slots, sample=sample))
+    return engines
+
+
+def warmup(engines: Sequence[ServeEngine], prompt_len: int,
+           gen_tokens: int = 2) -> None:
+    """Compile prefill + pool decode before timed serving (handles the
+    audio codebook and vision patch frontends)."""
+    for e in engines:
+        cfg = e.cfg
+        shape = ((1, cfg.num_codebooks, prompt_len) if cfg.num_codebooks
+                 else (1, prompt_len))
+        warm = jax.random.randint(jax.random.key(1), shape, 0,
+                                  cfg.vocab_size)
+        patches = None
+        if cfg.vision_patches:
+            patches = jax.random.normal(
+                jax.random.key(2), (1, cfg.vision_patches, cfg.vision_dim))
+        e.generate(warm, max(gen_tokens, 2), patches=patches)
+        e.reset()

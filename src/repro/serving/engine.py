@@ -1,24 +1,47 @@
-"""Batched serving engine: the per-ES "DEdgeAI worker" (paper Fig. 10).
+"""Continuous-batching serving engine: the per-ES "DEdgeAI worker".
 
-One engine wraps one model replica: jitted prefill + decode steps, a
-fixed-batch decode loop, and per-request latency accounting.  The
-edge-level scheduler (repro.core) decides WHICH engine serves a request;
-the engine measures the serve-side pieces of Eqn (2): queueing + compute.
+One engine wraps one model replica with a FIXED pool of KV slots.
+Requests are ``admit()``-ed into a queue; each ``step()``
+
+  1. refills free slots from the queue — one batch-1 prefill per joining
+     request, whose cache is written into the slot pool, and
+  2. runs ONE batched decode round across all occupied slots (a jitted
+     ``vmap`` over the per-slot caches, so every slot keeps its own
+     ``pos`` counter and requests can join/leave mid-flight), freeing the
+     slots of requests that hit their token budget.
+
+Per-request latency is MEASURED, not modelled: the Request lifecycle
+timestamps (queue / prefill / decode) decompose the serving-side terms of
+the paper's Eqn (2) exactly, replacing the old ``_busy_until`` wall-clock
+queue hack.  The edge-level scheduler (``repro.cluster``) decides WHICH
+engine serves a request; the engine reports its backlog via
+``pending_tokens`` / ``pending_seconds`` (the q_b signal of Eqn 3).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.cluster.request import Request
 from repro.train.steps import make_decode_step, make_prefill_step
 
 
 @dataclasses.dataclass
 class RequestResult:
+    """Batch-level result of the blocking :meth:`ServeEngine.generate`.
+
+    For B == 1 the three phases decompose the request's wall time
+    exactly.  For a batch they are aggregates — worst per-request queue
+    wait (slot contention when B > kv_slots), summed prefill compute,
+    and the shared decode span; per-request timestamps are available
+    through the ``admit()``/``step()`` API instead."""
+
     tokens: list
     prefill_s: float
     decode_s: float
@@ -30,74 +53,214 @@ class RequestResult:
 
 
 class ServeEngine:
-    """Fixed-shape batched engine for one model replica."""
+    """Continuous-batching engine for one model replica."""
 
     def __init__(self, cfg, params, *, max_len: int = 256,
-                 sample: bool = False, temperature: float = 1.0):
+                 kv_slots: int = 4, sample: bool = False,
+                 temperature: float = 1.0,
+                 clock: Callable[[], float] = time.monotonic):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
-        self._prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
-        dec = make_decode_step(cfg, sample=sample, temperature=temperature)
-        self._decode = jax.jit(dec)
-        self._busy_until = 0.0   # wall-clock queue model (FCFS, Eqn 3)
+        self.kv_slots = kv_slots
         self.sample = sample
+        self._clock = clock
+        self._prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
+        self._decode1 = make_decode_step(cfg, sample=sample,
+                                         temperature=temperature)
+        self._queue: collections.deque = collections.deque()
+        self._slots: List[Optional[Request]] = [None] * kv_slots
+        self._last_tok: List[Optional[np.ndarray]] = [None] * kv_slots
+        self._pool_states = None       # (slots, ...) stacked per-slot caches
+        self._pool_decode = None
+        self._insert = None
+        self._zero_tok = np.zeros(
+            (1, cfg.num_codebooks) if cfg.num_codebooks else (1,), np.int32)
+        self._rng = jax.random.key(0)
+        self._ewma_tok_s = 0.0         # measured seconds per decode round
+        self._next_rid = 0
 
+    # ------------------------------------------------------------------
+    # continuous-batching core
+    # ------------------------------------------------------------------
+    def admit(self, req: Request) -> None:
+        """Enqueue a request; it joins the decode batch when a slot frees."""
+        req.t_enqueue = self._clock()
+        req.engine_id = getattr(self, "engine_id", None)
+        self._queue.append(req)
+
+    def step(self) -> List[Request]:
+        """One scheduling iteration; returns requests finished this step."""
+        finished = []
+        free = [i for i, r in enumerate(self._slots) if r is None]
+        while free and self._queue:
+            req = self._queue.popleft()
+            i = free.pop(0)
+            req.t_prefill_start = self._clock()
+            batch = {"tokens": req.prompt}
+            if req.patches is not None:
+                batch["patches"] = req.patches
+            logits, st = self._prefill(self.params, batch)
+            tok = np.asarray(self._pick(logits))
+            req.t_prefill_end = self._clock()
+            req.tokens.append(tok)
+            if len(req.tokens) >= req.max_new_tokens:
+                req.t_finish = req.t_prefill_end
+                finished.append(req)
+                free.insert(0, i)
+                continue
+            self._ensure_pool(st)
+            self._pool_states = self._insert(self._pool_states, st,
+                                             jnp.int32(i))
+            self._slots[i] = req
+            self._last_tok[i] = tok
+
+        active = [i for i, r in enumerate(self._slots) if r is not None]
+        if active:
+            toks = np.stack([t if t is not None else self._zero_tok
+                             for t in self._last_tok])
+            keys = jax.random.split(self._next_key(), self.kv_slots)
+            t0 = self._clock()
+            tok_all, self._pool_states = self._pool_decode(
+                self.params, jnp.asarray(toks[..., None], jnp.int32),
+                self._pool_states, keys)
+            tok_all = np.asarray(tok_all)          # blocks until ready
+            # a round advances every occupied slot one token, so the
+            # per-token drain rate is round time / active lanes
+            dt = (self._clock() - t0) / len(active)
+            self._ewma_tok_s = (0.7 * self._ewma_tok_s + 0.3 * dt
+                                if self._ewma_tok_s else dt)
+            now = self._clock()
+            for i in active:
+                req = self._slots[i]
+                tk = tok_all[i]
+                req.tokens.append(tk)
+                self._last_tok[i] = tk
+                if len(req.tokens) >= req.max_new_tokens:
+                    req.t_finish = now
+                    finished.append(req)
+                    self._slots[i] = None
+        return finished
+
+    def run_to_completion(self, max_steps: int = 1_000_000) -> List[Request]:
+        """Step until queue and slots drain; returns finished requests."""
+        done = []
+        for _ in range(max_steps):
+            if not self.has_work:
+                break
+            done += self.step()
+        return done
+
+    def reset(self) -> None:
+        """Drop queued/in-flight work (pool caches are overwritten on use)."""
+        self._queue.clear()
+        self._slots = [None] * self.kv_slots
+        self._last_tok = [None] * self.kv_slots
+
+    # ------------------------------------------------------------------
+    # backlog signals (the scheduler's q_b / Eqn-3 observation)
+    # ------------------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or any(r is not None for r in self._slots)
+
+    @property
+    def pending_tokens(self) -> int:
+        """Tokens still to generate across queued + in-flight requests."""
+        n = sum(r.max_new_tokens for r in self._queue)
+        n += sum(r.max_new_tokens - len(r.tokens)
+                 for r in self._slots if r is not None)
+        return n
+
+    @property
+    def pending_seconds(self) -> float:
+        """Measured backlog estimate: pending tokens x EWMA token time."""
+        return self.pending_tokens * self._ewma_tok_s
+
+    # ------------------------------------------------------------------
+    # blocking compatibility API
     # ------------------------------------------------------------------
     def generate(self, prompts: jnp.ndarray, num_tokens: int,
                  rng: Optional[jax.Array] = None,
                  patches: Optional[jnp.ndarray] = None) -> RequestResult:
-        """prompts (B, S) [or (B, K, S) audio]; returns generated tokens
-        (B, num_tokens) plus timing."""
-        now = time.time()
-        queue_s = max(0.0, self._busy_until - now)
-
-        rng = rng if rng is not None else jax.random.key(0)
-        batch = {"tokens": prompts}
-        if patches is not None:
-            batch["patches"] = patches
-        t0 = time.time()
-        logits, states = self._prefill(self.params, batch)
-        logits.block_until_ready()
-        t1 = time.time()
-
-        def pick(lg, k):
-            if self.sample:
-                return jax.random.categorical(k, lg, axis=-1)
-            return jnp.argmax(lg, axis=-1)
-
-        toks = []
-        tok = pick(logits, rng).astype(jnp.int32)
-        multi = self.cfg.num_codebooks > 0
-        for step in range(num_tokens):
-            toks.append(tok)
-            nxt = tok[..., None] if not multi else tok[..., None]
-            rng, krng = jax.random.split(rng)
-            args = (self.params, {"tokens": nxt}, states)
-            if self.sample:
-                logits, tok, states = self._decode(*args, rng=krng)
-            else:
-                logits, tok, states = self._decode(*args)
-        jax.tree_util.tree_map(
-            lambda x: x.block_until_ready() if hasattr(
-                x, "block_until_ready") else x, states)
-        t2 = time.time()
-
-        self._busy_until = max(now, self._busy_until) + (t2 - t0)
-        return RequestResult(tokens=[t.tolist() for t in toks],
-                             prefill_s=t1 - t0, decode_s=t2 - t1,
-                             queue_s=queue_s)
+        """prompts (B, S) [or (B, K, S) audio] -> (B,)-stacked tokens per
+        generated step, plus measured timing (admit all, drain)."""
+        if rng is not None:
+            self._rng = rng
+        reqs = []
+        for b in range(prompts.shape[0]):
+            reqs.append(Request(
+                rid=self._next_rid, prompt=prompts[b:b + 1],
+                max_new_tokens=max(num_tokens, 1),
+                patches=None if patches is None else patches[b:b + 1]))
+            self._next_rid += 1
+            self.admit(reqs[-1])
+        self.run_to_completion()
+        toks = [np.concatenate([r.tokens[s] for r in reqs], axis=0)
+                for s in range(max(num_tokens, 1))]
+        t_dec0 = max(r.t_prefill_end for r in reqs)
+        t_end = max(r.t_finish for r in reqs)
+        return RequestResult(
+            tokens=toks,
+            prefill_s=sum(r.prefill_s for r in reqs),
+            decode_s=max(t_end - t_dec0, 0.0),
+            queue_s=max(max(r.queue_s for r in reqs), 0.0))
 
     # ------------------------------------------------------------------
-    @property
-    def pending_seconds(self) -> float:
-        """Current queue depth in seconds (the scheduler's q_bef signal)."""
-        return max(0.0, self._busy_until - time.time())
+    # internals
+    # ------------------------------------------------------------------
+    def _next_key(self):
+        self._rng, k = jax.random.split(self._rng)
+        return k
+
+    def _pick(self, logits):
+        if self.sample:
+            return jax.random.categorical(self._next_key(), logits, axis=-1
+                                          ).astype(jnp.int32)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _ensure_pool(self, st):
+        """Lazily build the slot pool + jitted batched decode from the
+        structure of the first prefill's cache (covers every arch family:
+        attention ring buffers, quantised caches, recurrent states)."""
+        if self._pool_states is not None:
+            return
+        slots = self.kv_slots
+        self._pool_states = jax.tree_util.tree_map(
+            lambda leaf: jnp.zeros((slots,) + leaf.shape, leaf.dtype), st)
+        self._insert = jax.jit(lambda pool, s, i: jax.tree_util.tree_map(
+            lambda p_, s_: p_.at[i].set(s_), pool, s))
+        dec, sample = self._decode1, self.sample
+
+        def pool_step(params, toks, states, keys):
+            def one(tk, st_, k):
+                if sample:
+                    _, tok, ns = dec(params, {"tokens": tk}, st_, rng=k)
+                else:
+                    _, tok, ns = dec(params, {"tokens": tk}, st_)
+                return tok, ns
+
+            return jax.vmap(one)(toks, states, keys)
+
+        self._pool_decode = jax.jit(pool_step)
 
 
 def serve_batch(engines: List[ServeEngine], assignments: List[int],
                 prompts: List[jnp.ndarray], num_tokens: int
                 ) -> List[RequestResult]:
-    """Route each prompt to its assigned engine (FCFS per engine)."""
-    return [engines[assignments[i]].generate(prompts[i][None], num_tokens)
-            for i in range(len(prompts))]
+    """Route each prompt to its assigned engine, serve them concurrently
+    (continuous batching within each engine), return per-request results."""
+    reqs = []
+    for i, pr in enumerate(prompts):
+        # prompts arrive unbatched — (S,) text or (K, S) audio — and gain
+        # the leading batch dim here (matching the original serve_batch)
+        req = Request(rid=i, prompt=pr[None],
+                      max_new_tokens=max(num_tokens, 1))
+        reqs.append(req)
+        engines[assignments[i]].admit(req)
+    while any(e.has_work for e in engines):
+        for e in engines:
+            e.step()
+    return [RequestResult(tokens=r.tokens, prefill_s=r.prefill_s,
+                          decode_s=r.decode_s, queue_s=r.queue_s)
+            for r in reqs]

@@ -1,0 +1,75 @@
+"""Property-test compatibility layer.
+
+Uses real ``hypothesis`` when it is installed; otherwise provides a
+deterministic fallback that replays a fixed number of seeded examples per
+test (seeded from the test name, so runs are reproducible across
+processes).  Test modules import ``given`` / ``settings`` / ``st`` from
+here instead of hard-importing hypothesis, so tier-1 collection works in
+a clean environment.
+"""
+try:
+    from hypothesis import given, settings               # noqa: F401
+    import hypothesis.strategies as st                   # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import functools
+    import inspect
+    import random
+
+    _FALLBACK_EXAMPLES = 8
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        """The subset of hypothesis.strategies the test suite uses."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+    st = _St()
+
+    def settings(max_examples=_FALLBACK_EXAMPLES, **_kwargs):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = min(getattr(wrapper, "_max_examples",
+                                _FALLBACK_EXAMPLES), _FALLBACK_EXAMPLES)
+                for ex in range(n):
+                    rng = random.Random(f"{fn.__module__}.{fn.__name__}:{ex}")
+                    drawn = {k: s.example(rng)
+                             for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # hide the original parameters from pytest's fixture
+            # resolution (the strategies supply them, not fixtures)
+            wrapper.__dict__.pop("__wrapped__", None)
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

@@ -5,4 +5,7 @@ import sys
 # the 1 real CPU device.  Only the dry-run (repro.launch.dryrun) forces 512
 # placeholder devices, and multi-device sharding tests spawn a subprocess
 # with their own flag (tests/test_sharding_multidevice.py).
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_HERE = os.path.dirname(__file__)
+sys.path.insert(0, os.path.join(_HERE, "..", "src"))
+sys.path.insert(0, os.path.join(_HERE, ".."))   # benchmarks.* imports
+sys.path.insert(0, _HERE)                        # _property shim

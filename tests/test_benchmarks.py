@@ -1,0 +1,38 @@
+"""Benchmark helpers: convergence_episode robustness."""
+import numpy as np
+
+from benchmarks.scheduling import convergence_episode
+
+
+def test_convergence_empty_and_singleton():
+    assert convergence_episode([]) == 0
+    assert convergence_episode([5.0]) == 0
+
+
+def test_convergence_short_lists_no_degenerate_slice():
+    # fewer than 3 episodes: plateau window must clamp to the list length
+    assert convergence_episode([5.0, 5.0]) == 0
+    assert convergence_episode([10.0, 5.0]) in (0, 1)
+
+
+def test_convergence_constant_curve():
+    assert convergence_episode([2.0] * 10) == 0
+    # all-zero plateau must not divide by zero
+    assert convergence_episode([0.0] * 5) == 0
+
+
+def test_convergence_detects_plateau_start():
+    curve = [10.0, 8.0, 6.0] + [5.0] * 12
+    i = convergence_episode(curve)
+    assert i == 3
+    # noisy plateau still converges near the knee
+    rng = np.random.default_rng(0)
+    noisy = [10.0, 8.0, 6.0] + list(5.0 + 0.01 * rng.standard_normal(12))
+    assert convergence_episode(noisy) <= 4
+
+
+def test_convergence_never_out_of_range():
+    for n in range(8):
+        curve = list(np.linspace(10.0, 1.0, n))
+        i = convergence_episode(curve)
+        assert 0 <= i <= max(n - 1, 0)

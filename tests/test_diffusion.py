@@ -1,9 +1,9 @@
 """Diffusion schedule + latent action chain (paper Theorem 2)."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+
+from _property import given, settings, st
 
 from repro.core import networks as nets
 from repro.core.diffusion import (forward_sample, make_schedule,

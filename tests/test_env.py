@@ -1,11 +1,11 @@
 """Property-based tests on the AIGC edge environment invariants
 (paper Eqns 2-4): queues never go negative, delays decompose exactly,
 masked tasks are inert, and local processing is consistent."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+
+from _property import given, settings, st
 
 from repro.core import env as envlib
 

@@ -1,9 +1,9 @@
 """Property tests: circular experience pool semantics."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+
+from _property import given, settings, st
 
 from repro.core.replay import replay_add, replay_init, replay_sample
 
