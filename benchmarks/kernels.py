@@ -1,5 +1,12 @@
-"""Pallas kernel microbenchmarks (interpret mode on CPU: relative numbers
-prove the fusion structure; absolute TPU timings require hardware).
+"""Pallas kernel microbenchmarks.
+
+Each bench times the *serving-path* entry point (the ``repro.kernels.ops``
+wrapper with its backend-default execution mode) rather than forcing the
+Pallas interpreter: on TPU the kernels compile; off TPU ``flash_*`` fall
+back to interpret mode and ``paged_flash_decode`` dispatches to its
+XLA-compiled gather oracle.  Every row labels the mode actually measured
+(``interpret_mode=``) so CPU numbers are never mistaken for compiled-
+kernel numbers.
 
 The fused-LADN bench is the paper-relevant one: scheduler decision latency
 is on the serving critical path (Algorithm 1 runs per task arrival).
@@ -7,7 +14,7 @@ is on the serving critical path (Algorithm 1 runs per task arrival).
 from __future__ import annotations
 
 import time
-from typing import List
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,9 +39,19 @@ def _time(fn, *args, reps: int = 5, **kw) -> float:
     return (time.time() - t0) / reps * 1e6  # us
 
 
-def bench_kernels() -> List[str]:
-    rows = []
+def bench_kernels() -> Tuple[List[str], List[dict]]:
+    """Returns (csv_rows, json_records)."""
+    rows, records = [], []
     key = jax.random.key(0)
+    # ops wrappers pick this themselves when interpret is unspecified;
+    # resolve it here only to label and scale the benches honestly
+    interp = jax.default_backend() != "tpu"
+    mode = int(interp)
+
+    def note(name: str, us: float, extra: str, **rec):
+        rows.append(f"{name},{us:.0f},{extra};interpret_mode={mode}")
+        records.append({"bench": name, "us_per_call": us,
+                        "interpret_mode": bool(interp), **rec})
 
     # flash attention (small: interpret mode is slow)
     B, H, KV, S, hd = 1, 4, 2, 512, 64
@@ -42,20 +59,38 @@ def bench_kernels() -> List[str]:
     q = jax.random.normal(ks[0], (B, H, S, hd))
     k = jax.random.normal(ks[1], (B, KV, S, hd))
     v = jax.random.normal(ks[2], (B, KV, S, hd))
-    us = _time(ops.flash_attention, q, k, v, bq=128, bk=128,
-               interpret=True, reps=2)
+    us = _time(ops.flash_attention, q, k, v, bq=128, bk=128, reps=2)
     flops = 4 * B * H * S * S * hd / 2  # causal
-    rows.append(f"kernel_flash_attention_S{S},{us:.0f},"
-                f"causal_gflop={flops/1e9:.2f}")
+    note(f"kernel_flash_attention_S{S}", us,
+         f"causal_gflop={flops/1e9:.2f}", seq_len=S)
 
-    # flash decode
-    kc = jax.random.normal(ks[1], (2, KV, 2048, hd))
-    vc = jax.random.normal(ks[2], (2, KV, 2048, hd))
+    # flash decode — compiled on the default backend (interpret only as
+    # the off-TPU fallback the wrapper itself selects)
+    Sc = 2048
+    kc = jax.random.normal(ks[1], (2, KV, Sc, hd))
+    vc = jax.random.normal(ks[2], (2, KV, Sc, hd))
     qd = jax.random.normal(ks[0], (2, H, hd))
-    us = _time(ops.flash_decode, qd, kc, vc, 2048, bk=256, interpret=True,
-               reps=2)
-    rows.append(f"kernel_flash_decode_S2048,{us:.0f},"
-                f"cache_mb={kc.size*2*4/1e6:.1f}")
+    us = _time(ops.flash_decode, qd, kc, vc, Sc, bk=256, reps=2)
+    note(f"kernel_flash_decode_S{Sc}", us,
+         f"cache_mb={kc.size*2*4/1e6:.1f}", seq_len=Sc)
+
+    # paged flash decode — same token count scattered across a shared
+    # page pool through per-sequence block tables
+    ps, npages = 64, Sc // 64
+    pool = 1 + 2 * npages
+    kp = jax.random.normal(ks[1], (pool, KV, ps, hd))
+    vp = jax.random.normal(ks[2], (pool, KV, ps, hd))
+    tbl = (1 + jax.random.permutation(jax.random.key(7), 2 * npages)
+           ).reshape(2, npages).astype(jnp.int32)
+    us = _time(ops.paged_flash_decode, qd, kp, vp, tbl,
+               jnp.asarray([Sc, Sc // 2], jnp.int32), reps=2)
+    # off TPU this wrapper runs the XLA gather oracle, not the interpreter
+    pmode = "xla_ref" if interp else "0"
+    rows.append(f"kernel_paged_flash_decode_S{Sc},{us:.0f},"
+                f"page_size={ps};pool_pages={pool};interpret_mode={pmode}")
+    records.append({"bench": f"kernel_paged_flash_decode_S{Sc}",
+                    "us_per_call": us, "interpret_mode": pmode,
+                    "seq_len": Sc, "page_size": ps})
 
     # fused LADN chain vs unfused jnp chain (the scheduler hot loop)
     cfg = AgentConfig()
@@ -66,7 +101,7 @@ def bench_kernels() -> List[str]:
     s = jax.random.normal(ks[1], (T, S_DIM))
 
     us_fused = _time(ops.ladn_denoise, theta, x_I, s, ks[2], num_steps=I,
-                     state_dim=S_DIM, action_dim=A, interpret=True, reps=3)
+                     state_dim=S_DIM, action_dim=A, reps=3)
 
     sched = make_schedule(I)
 
@@ -81,12 +116,14 @@ def bench_kernels() -> List[str]:
         return jax.vmap(one)(x_I, s, keys)
 
     us_unfused = _time(unfused, theta, x_I, s, ks[2], reps=3)
-    # NOTE: on CPU the fused kernel runs under the Pallas *interpreter*
-    # while the unfused chain is XLA-compiled, so the ratio here reflects
+    # NOTE: off-TPU the fused kernel runs under the Pallas *interpreter*
+    # while the unfused chain is XLA-compiled, so the ratio there reflects
     # interpreter overhead, not the TPU VMEM-residency win the kernel is
     # designed for (see DESIGN.md §4).
-    rows.append(f"kernel_ladn_fused_T{T},{us_fused:.0f},"
-                f"I={I};interpret_mode=1")
+    note(f"kernel_ladn_fused_T{T}", us_fused, f"I={I}", tasks=T)
     rows.append(f"kernel_ladn_unfused_T{T},{us_unfused:.0f},"
                 f"xla_compiled=1")
-    return rows
+    records.append({"bench": f"kernel_ladn_unfused_T{T}",
+                    "us_per_call": us_unfused, "interpret_mode": False,
+                    "tasks": T})
+    return rows, records

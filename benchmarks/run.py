@@ -1,10 +1,16 @@
 """Benchmark harness: one bench per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV.  With ``--out-dir`` the
+closedloop and kernels benches additionally write machine-readable
+results (``BENCH_closedloop.json`` / ``BENCH_kernels.json``: per-scheduler
+throughput + p50/p95/p99 service delay, per-kernel timings with their
+execution mode) for CI artifacts and cross-run comparison.
 
   PYTHONPATH=src python -m benchmarks.run                # quick scale
   PYTHONPATH=src python -m benchmarks.run --scale paper  # Table-III scale
   PYTHONPATH=src python -m benchmarks.run --only fig5,kernels
+  PYTHONPATH=src python -m benchmarks.run --only closedloop,kernels \
+      --out-dir bench_out
 
 Mapping to the paper:
   fig5     -> Fig. 5   learning curves + convergence episodes
@@ -22,6 +28,8 @@ Mapping to the paper:
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -32,11 +40,29 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig5,fig6a,fig6b,fig7a,fig7b,fig8,"
                          "tablev,closedloop,kernels,roofline")
+    ap.add_argument("--out-dir", default=None,
+                    help="write BENCH_<name>.json result files here")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     def want(name):
         return only is None or name in only
+
+    def emit(name, records):
+        if args.out_dir is None:
+            return
+        os.makedirs(args.out_dir, exist_ok=True)
+        path = os.path.join(args.out_dir, f"BENCH_{name}.json")
+
+        def tolist(o):   # numpy / jax scalars and arrays
+            if hasattr(o, "tolist"):
+                return o.tolist()
+            return str(o)
+
+        with open(path, "w") as f:
+            json.dump({"bench": name, "scale": args.scale,
+                       "records": records}, f, indent=2, default=tolist)
+        print(f"# wrote {path}", file=sys.stderr)
 
     rows = []
     t0 = time.time()
@@ -69,10 +95,14 @@ def main() -> None:
         rows += bench_tablev()
     if want("closedloop"):
         from benchmarks.serving import bench_closed_loop
-        rows += bench_closed_loop(args.scale)
+        r, recs = bench_closed_loop(args.scale)
+        rows += r
+        emit("closedloop", recs)
     if want("kernels"):
         from benchmarks.kernels import bench_kernels
-        rows += bench_kernels()
+        r, recs = bench_kernels()
+        rows += r
+        emit("kernels", recs)
     if want("roofline"):
         from benchmarks.roofline import bench_roofline
         rows += bench_roofline()

@@ -6,9 +6,14 @@
                          baselines on real engines" number: a Poisson
                          arrival trace replayed through N continuous-
                          batching engines under each scheduler, reporting
-                         mean / p95 service delay per scheduler, plus the
-                         same schedulers evaluated in the ``core.env``
-                         simulator through the identical interface.
+                         throughput and mean / p50 / p95 / p99 service
+                         delay per scheduler (CSV rows + JSON records),
+                         plus the same schedulers evaluated in the
+                         ``core.env`` simulator through the identical
+                         interface.  The live engines serve from the
+                         shared KV page pool, so the per-scheduler
+                         ``peak_inflight`` exceeds what the old
+                         slot-partitioned cache allowed.
 """
 from __future__ import annotations
 
@@ -75,11 +80,21 @@ def bench_tablev(num_requests=(1, 8, 32), prompt_len: int = 16,
 
 
 def bench_closed_loop(scale: str = "quick", n_edge: int = 4,
-                      num_requests: int = 24, rate: float = 8.0,
-                      prompt_len: int = 16, gen_tokens: int = 8,
-                      seed: int = 0) -> List[str]:
+                      num_requests: int = 24, rate: float = 96.0,
+                      prompt_len: int = 32, gen_tokens: int = 8,
+                      seed: int = 0, kv_slots: int = 2,
+                      prefill_chunk: int = 16):
     """Closed loop: train LAD-TS in the sim, then replay one Poisson trace
-    through the live cluster under the paper policy and each baseline."""
+    through the live cluster under the paper policy and each baseline.
+
+    The live engines run the paged KV path where the config supports it:
+    ``kv_slots`` sizes only the shared page-pool KV *budget*, and the
+    per-scheduler ``peak_inflight`` record shows concurrency exceeding
+    it (the dense engine at this budget could never hold more than
+    ``kv_slots`` requests).  ``prompt_len > prefill_chunk`` forces every
+    prompt through multi-chunk prefill interleaved with decode rounds.
+
+    Returns (csv_rows, json_records)."""
     paper = scale == "paper"
     p = EnvParams(num_bs=n_edge, num_slots=30 if paper else 8,
                   max_tasks=12 if paper else 6)
@@ -102,21 +117,30 @@ def bench_closed_loop(scale: str = "quick", n_edge: int = 4,
             "local": make_scheduler("local", n_edge),
         }
 
-    rows = []
+    rows, records = [], []
     # --- same Scheduler interface against the core.env simulator ----------
     for name, s in scheds().items():
         t0 = time.monotonic()
         r = evaluate_scheduler(s, p, episodes=2, key=jax.random.key(1))
-        us = (time.monotonic() - t0) / max(r["count"], 1) * 1e6
+        wall = time.monotonic() - t0
+        us = wall / max(r["count"], 1) * 1e6
         rows.append(f"closedloop_sim/{name},{us:.0f},"
                     f"mean={r['mean_s']:.3f}s;p95={r['p95_s']:.3f}s")
+        records.append({"bench": "closedloop_sim", "scheduler": name,
+                        "wall_s": wall, **r})
 
     # --- and against the live engines --------------------------------------
     mcfg = reduced(get_config("qwen2-1.5b"))
-    max_len = prompt_len + gen_tokens
+    # engines are provisioned for requests up to max_len; the trace's
+    # (prompt + gen) requests are smaller, so the page pool fits several
+    # of them inside one dense slot's worth of KV — that headroom is
+    # exactly what the slot-partitioned cache wasted
+    max_len = 3 * (prompt_len + gen_tokens)
     engines = build_engines("qwen2-1.5b", n_edge, max_len,
                             depths=[2 + (i % 2) for i in range(n_edge)],
-                            seed0=1)
+                            seed0=1, kv_slots=kv_slots,
+                            prefill_chunk=prefill_chunk,
+                            max_lanes=4 * kv_slots)
     warmup(engines, prompt_len)
     for name, s in scheds().items():
         for e in engines:
@@ -129,8 +153,23 @@ def bench_closed_loop(scale: str = "quick", n_edge: int = 4,
                               num_origins=n_edge, seed=seed + 1)
         t0 = time.monotonic()
         stats = summarize(cluster.run(trace))
-        us = (time.monotonic() - t0) / max(stats["count"], 1) * 1e6
+        wall = time.monotonic() - t0
+        us = wall / max(stats["count"], 1) * 1e6
+        peak = max(e.peak_inflight for e in engines)
         rows.append(f"closedloop_live/{name},{us:.0f},"
                     f"mean={stats['mean_s']:.3f}s;"
-                    f"p95={stats['p95_s']:.3f}s")
-    return rows
+                    f"p50={stats['p50_s']:.3f}s;"
+                    f"p95={stats['p95_s']:.3f}s;"
+                    f"p99={stats['p99_s']:.3f}s;"
+                    f"peak_inflight={peak}")
+        records.append({
+            "bench": "closedloop_live", "scheduler": name,
+            "wall_s": wall,
+            "throughput_rps": stats["count"] / max(wall, 1e-9),
+            "paged": bool(engines[0].paged),
+            "kv_slots": kv_slots,
+            "prefill_chunk": prefill_chunk,
+            "prompt_len": prompt_len,
+            "peak_inflight": peak,
+            **stats})
+    return rows, records

@@ -104,11 +104,14 @@ def poisson_trace(num_requests: int, rate: float, prompt_len: int,
 
 
 def summarize(requests: List[Request]) -> dict:
-    """Mean / p95 / max service delay over completed requests."""
+    """Mean / p50 / p95 / p99 / max service delay over completed requests."""
     delays = np.asarray([r.service_s for r in requests if r.done])
     if delays.size == 0:
-        return {"count": 0, "mean_s": 0.0, "p95_s": 0.0, "max_s": 0.0}
+        return {"count": 0, "mean_s": 0.0, "p50_s": 0.0, "p95_s": 0.0,
+                "p99_s": 0.0, "max_s": 0.0}
     return {"count": int(delays.size),
             "mean_s": float(delays.mean()),
+            "p50_s": float(np.percentile(delays, 50)),
             "p95_s": float(np.percentile(delays, 95)),
+            "p99_s": float(np.percentile(delays, 99)),
             "max_s": float(delays.max())}

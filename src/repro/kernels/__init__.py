@@ -1,3 +1,5 @@
-from repro.kernels.ops import flash_attention, flash_decode, ladn_denoise
+from repro.kernels.ops import (flash_attention, flash_decode, ladn_denoise,
+                               paged_flash_decode)
 
-__all__ = ["flash_attention", "flash_decode", "ladn_denoise"]
+__all__ = ["flash_attention", "flash_decode", "ladn_denoise",
+           "paged_flash_decode"]

@@ -5,13 +5,32 @@ point of the kernel is to stream the (B, KV, S, hd) cache through VMEM
 exactly once with online softmax, instead of materialising (B, H, S)
 score tensors in HBM.
 
-Grid: (B * KV, S/bk) — kv blocks innermost, running (m, l, acc) in VMEM
-scratch like the prefill kernel.  All G = H/KV query heads of one KV group
-are processed together as a (G, hd) tile (G is tiny: 1-16), so the MXU
-sees a (G, hd) x (hd, bk) matmul per block.
+Two cache layouts share the same online-softmax inner loop:
 
-``length`` masks ring-buffer slots that are not yet populated (cache pos
-< capacity); fully-invalid trailing blocks are skipped with @pl.when.
+``flash_decode``
+    Dense per-sequence ring buffers (B, KV, S, hd).  Grid (B*KV, S/bk),
+    kv blocks innermost, running (m, l, acc) in VMEM scratch like the
+    prefill kernel.  All G = H/KV query heads of one KV group are
+    processed together as a (G, hd) tile (G is tiny: 1-16), so the MXU
+    sees a (G, hd) x (hd, bk) matmul per block.  ``length`` masks
+    ring-buffer slots that are not yet populated; fully-invalid trailing
+    blocks are skipped with @pl.when.
+
+``paged_flash_decode``
+    vLLM-style shared page pool (num_pages, KV, page_size, hd): every
+    sequence owns a list of pages named by a per-sequence block-index
+    table (B, pages_per_seq), so cache memory is pooled across requests
+    instead of statically partitioned into per-slot rings.  The grid
+    gains a pages dimension — (B*KV, pages_per_seq) — and the page for
+    grid step (b, j) is *gathered through the block table* with a
+    scalar-prefetch index map (the table is prefetched to SMEM before
+    the kernel body runs, so the DMA for page j can be issued from
+    ``table[b, j]``).  The dense kernel's ``length`` masking generalizes
+    directly: it masks the trailing partial page, and pages past
+    ceil(length/page_size) are skipped with the same @pl.when guard.
+    Unmapped table entries must still be *valid* page indices (the
+    caller clamps them to 0 — the allocator's reserved null page) since
+    the block DMA happens regardless of the compute guard.
 """
 from __future__ import annotations
 
@@ -107,4 +126,101 @@ def flash_decode(q, k_cache, v_cache, length, *, bk: int = 512,
         ],
         interpret=interpret,
     )(lengths, qf, kf, vf)
+    return out.reshape(B, H, hd)
+
+
+def _paged_decode_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, scale: float, ps: int,
+                         npages: int, G: int, KV: int):
+    bh = pl.program_id(0)
+    pj = pl.program_id(1)
+    length = len_ref[bh // KV]
+    k_start = pj * ps
+
+    @pl.when(pj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(k_start < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)           # (ps, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (G, ps)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (G, ps), 1)
+        s = jnp.where(kpos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = (acc_scr[...] * corr
+                        + jax.lax.dot_general(
+                            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(pj == npages - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_flash_decode(q, k_pages, v_pages, block_tables, lengths, *,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Flash decode over a shared KV page pool.
+
+    q            (B, H, hd) one query token per sequence.
+    k/v_pages    (num_pages, KV, page_size, hd) the shared pool.
+    block_tables (B, pages_per_seq) int32: logical page j of sequence b
+                 lives in physical page ``block_tables[b, j]``.  Entries
+                 past the mapped range may hold any value (clamped to a
+                 valid index here; masked out of the softmax by length).
+    lengths      () or (B,) valid tokens per sequence.
+
+    Returns (B, H, hd).  A sequence with length 0 returns zeros.
+    """
+    B, H, hd = q.shape
+    P, KV, ps, _ = k_pages.shape
+    G = H // KV
+    npages = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    qf = q.reshape(B, KV, G, hd).reshape(B * KV, G, hd)
+    tbl = jnp.clip(jnp.asarray(block_tables, jnp.int32), 0, P - 1)
+    lens = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (B,))
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale, ps=ps,
+                               npages=npages, G=G, KV=KV)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,        # block tables + lengths land in SMEM
+        grid=(B * KV, npages),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda bh, pj, tbl, lens: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd),
+                         lambda bh, pj, tbl, lens:
+                         (tbl[bh // KV, pj], bh % KV, 0, 0)),
+            pl.BlockSpec((1, 1, ps, hd),
+                         lambda bh, pj, tbl, lens:
+                         (tbl[bh // KV, pj], bh % KV, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd),
+                               lambda bh, pj, tbl, lens: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(tbl, lens, qf, k_pages, v_pages)
     return out.reshape(B, H, hd)

@@ -14,7 +14,10 @@ import jax.numpy as jnp
 
 from repro.core.diffusion import DiffusionSchedule
 from repro.core.networks import TIME_EMBED_DIM, timestep_embed
+from repro.kernels import ref as _ref
 from repro.kernels.decode_attention import flash_decode as _flash_decode
+from repro.kernels.decode_attention import (paged_flash_decode
+                                            as _paged_flash_decode)
 from repro.kernels.flash_attention import flash_attention as _flash_attn
 from repro.kernels.ladn_denoise import ladn_denoise_fused
 
@@ -44,6 +47,27 @@ def flash_decode(q, k_cache, v_cache, length, *, bk: int = 512,
         interpret = _default_interpret()
     return _flash_decode(q, k_cache, v_cache, length, bk=bk,
                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_decode(q, k_pages, v_pages, block_tables, lengths, *,
+                       interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Paged flash decode (see kernels.decode_attention.paged_flash_decode).
+
+    ``interpret=None`` picks the serving-sensible path per backend: the
+    compiled Pallas kernel on TPU, and the XLA-compiled jnp gather oracle
+    elsewhere (the Pallas *interpreter* is orders of magnitude slower than
+    XLA and would dominate the engine's decode hot loop on CPU).  Pass
+    ``interpret=True`` explicitly to exercise the kernel itself off-TPU
+    (the validation tests do).
+    """
+    if interpret is None:
+        if _default_interpret():
+            return _ref.paged_decode_ref(q, k_pages, v_pages, block_tables,
+                                         lengths)
+        interpret = False
+    return _paged_flash_decode(q, k_pages, v_pages, block_tables, lengths,
+                               interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

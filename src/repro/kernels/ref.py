@@ -50,6 +50,24 @@ def decode_ref(q, k_cache, v_cache, length) -> jnp.ndarray:
     return out.reshape(B, H, hd).astype(q.dtype)
 
 
+def paged_decode_ref(q, k_pages, v_pages, block_tables, lengths
+                     ) -> jnp.ndarray:
+    """Paged decode oracle: gather pages dense, then :func:`decode_ref`.
+
+    q (B,H,hd); k/v_pages (P,KV,ps,hd); block_tables (B,npages) int32;
+    lengths () or (B,).  Also the XLA-compiled serving path off-TPU.
+    """
+    B = q.shape[0]
+    P, KV, ps, hd = k_pages.shape
+    npages = block_tables.shape[1]
+    tbl = jnp.clip(jnp.asarray(block_tables, jnp.int32), 0, P - 1)
+    k = k_pages[tbl]                              # (B, npages, KV, ps, hd)
+    v = v_pages[tbl]
+    k = k.transpose(0, 2, 1, 3, 4).reshape(B, KV, npages * ps, hd)
+    v = v.transpose(0, 2, 1, 3, 4).reshape(B, KV, npages * ps, hd)
+    return decode_ref(q, k, v, lengths)
+
+
 def ladn_denoise_ref(x_I, s, noise, temb_w1, w1x, w1s, b1, w2, b2, w3, b3,
                      sched: DiffusionSchedule,
                      paper_variance: bool = True) -> jnp.ndarray:

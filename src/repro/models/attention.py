@@ -251,6 +251,115 @@ def prefill(p, cfg, blk, x, positions, max_len: Optional[int] = None
     return out, cache
 
 
+# ---------------------------------------------------------------------------
+# paged KV cache (vLLM-style shared page pool)
+# ---------------------------------------------------------------------------
+#
+# Layout: one pool per layer, {"k_pages": (P, KV, ps, hd), "v_pages": ...};
+# page 0 is the allocator's reserved null page (never handed to a live
+# sequence), so clamped/unmapped block-table entries and masked write lanes
+# land there harmlessly.  The block table (pages_per_seq ids per sequence)
+# is SHARED across layers: every layer writes the same logical positions,
+# so one allocation describes all of them.
+
+
+def init_paged_kv_cache(cfg, blk, num_pages: int, page_size: int,
+                        make=jnp.zeros):
+    """Empty per-layer page pool.  ``make`` may be jax.ShapeDtypeStruct."""
+    if blk.window is not None or cfg.kv_cache_dtype == "int8":
+        raise ValueError(
+            "paged KV serving supports full-attention model-dtype caches "
+            f"only (window={blk.window}, kv_cache_dtype="
+            f"{cfg.kv_cache_dtype})")
+    dtype = _cache_dtype(cfg)
+    kv = cfg.num_kv_heads
+    return {"k_pages": make((num_pages, kv, page_size, cfg.head_dim), dtype),
+            "v_pages": make((num_pages, kv, page_size, cfg.head_dim), dtype)}
+
+
+def _page_of(block_table, pos, page_size):
+    """Physical page ids for logical positions; overshoot clamps onto the
+    table's trailing null-padded entries (see ServeEngine row padding)."""
+    idx = jnp.clip(pos // page_size, 0, block_table.shape[-1] - 1)
+    return jnp.take_along_axis(block_table, idx, axis=-1)
+
+
+def _scatter_pages(pages, vals, block_table, start):
+    """Write ``vals`` (n, KV, hd) at positions start..start+n-1 of one
+    sequence.  pages (P, KV, ps, hd); block_table (pages_per_seq,)."""
+    ps = pages.shape[2]
+    pos = start + jnp.arange(vals.shape[0])
+    page = _page_of(block_table, pos, ps)
+    return pages.at[page, :, pos % ps].set(vals.astype(pages.dtype))
+
+
+def _gather_pages(pages, block_table, max_ctx: int):
+    """Dense (max_ctx, KV, hd) view of one sequence's pages (garbage past
+    the written length — callers mask by position)."""
+    ps = pages.shape[2]
+    pos = jnp.arange(max_ctx)
+    page = _page_of(block_table, pos, ps)
+    return pages[page, :, pos % ps]
+
+
+def paged_prefill_chunk(p, cfg, blk, x, cache, block_table, start
+                        ) -> Tuple[jnp.ndarray, dict]:
+    """One prompt chunk through paged attention.  x (1, C, d) holds tokens
+    at absolute positions start..start+C-1 (tail may be padding — pad
+    positions are only ever read causally by pad queries, and decode
+    overwrites their page slots before reading them).
+
+    Writes the chunk's KV into the pool, then attends the chunk's queries
+    against the full gathered context with absolute causal masking — so a
+    long prompt admits as a sequence of these calls interleaved with
+    decode rounds instead of one blocking batch-1 prefill.
+    """
+    B, C, _ = x.shape
+    positions = start + jnp.arange(C)[None]                    # (1, C)
+    q, k, v = _project_qkv(p, cfg, x, positions, blk.use_rope)
+    k_pages = _scatter_pages(cache["k_pages"], k[0], block_table, start)
+    v_pages = _scatter_pages(cache["v_pages"], v[0], block_table, start)
+    max_ctx = block_table.shape[-1] * k_pages.shape[2]
+    kd = _gather_pages(k_pages, block_table, max_ctx)[None]    # (1,ctx,KV,hd)
+    vd = _gather_pages(v_pages, block_table, max_ctx)[None]
+    out = chunked_causal_attention(q, kd, vd, q_offset=start,
+                                   q_chunk=cfg.attn_chunk,
+                                   kv_chunk=cfg.attn_chunk)
+    out = out.reshape(B, C, cfg.num_heads * cfg.head_dim) @ p["wo"]
+    return out, {"k_pages": k_pages, "v_pages": v_pages}
+
+
+def paged_decode(p, cfg, blk, x, cache, block_tables, lengths
+                 ) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode over the shared page pool.
+
+    x (B, 1, d); lengths (B,) tokens already written per lane.  Writes the
+    new token's KV at position lengths[b] of each lane's block table, then
+    attends lengths[b]+1 tokens via the paged flash-decode kernel (TPU)
+    or its XLA gather twin (CPU).  Inactive lanes pass a null block table
+    (all page 0) and length 0 — their writes and reads hit the reserved
+    null page and their outputs are discarded by the engine.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    B = x.shape[0]
+    hd = cfg.head_dim
+    q, k, v = _project_qkv(p, cfg, x, lengths[:, None], blk.use_rope)
+    ps = cache["k_pages"].shape[2]
+    page = _page_of(block_tables, lengths[:, None], ps)[:, 0]  # (B,)
+    slot = lengths % ps
+    dtype = cache["k_pages"].dtype
+    k_pages = cache["k_pages"].at[page, :, slot].set(
+        k[:, 0].astype(dtype))
+    v_pages = cache["v_pages"].at[page, :, slot].set(
+        v[:, 0].astype(dtype))
+    out = kernel_ops.paged_flash_decode(q[:, 0], k_pages, v_pages,
+                                        block_tables, lengths + 1)
+    out = out.reshape(B, 1, cfg.num_heads * hd).astype(x.dtype)
+    out = out @ p["wo"]
+    return out, {"k_pages": k_pages, "v_pages": v_pages}
+
+
 def decode(p, cfg, blk, x, cache) -> Tuple[jnp.ndarray, dict]:
     """One-token decode.  x (B,1,d); cache holds ``pos`` tokens already."""
     B = x.shape[0]

@@ -183,21 +183,74 @@ def init_layer_states(cfg, batch: int, max_len: int, make=jnp.zeros,
     return {"flat": [one(b) for b in pattern]}
 
 
+def init_paged_states(cfg, num_pages: int, page_size: int,
+                      make=jnp.zeros) -> dict:
+    """Per-layer shared page pools, mirroring the params layer layout.
+
+    One (num_pages, KV, page_size, hd) k/v pool per layer; the block table
+    mapping sequences to pages lives in the serving engine (it is shared
+    across layers, so it is not part of this state pytree).  Only
+    all-attention stacks can be paged — recurrent mixers have no KV to
+    page (the engine falls back to dense slot caches for those).
+    """
+    pattern = cfg.layer_pattern()
+    P = len(cfg.pattern)
+
+    def one(blk):
+        if blk.mixer != "attn":
+            raise ValueError(
+                f"paged serving requires attention mixers, got {blk.mixer}")
+        return attention.init_paged_kv_cache(cfg, blk, num_pages, page_size,
+                                             make=make)
+
+    if cfg.scan_layers:
+        n_groups, rem = _layer_layout(cfg)
+        if n_groups == 0:
+            return {"scan": [],
+                    "rem": [one(pattern[j]) for j in range(rem)]}
+
+        def stacked(blk):
+            base = one(blk)
+            return jax.tree_util.tree_map(
+                lambda leaf: (jax.ShapeDtypeStruct((n_groups,) + leaf.shape,
+                                                   leaf.dtype)
+                              if isinstance(leaf, jax.ShapeDtypeStruct)
+                              else jnp.broadcast_to(
+                                  leaf, (n_groups,) + leaf.shape)),
+                base)
+
+        return {"scan": [stacked(pattern[j]) for j in range(P)],
+                "rem": [one(pattern[n_groups * P + j]) for j in range(rem)]}
+    return {"flat": [one(b) for b in pattern]}
+
+
 # ---------------------------------------------------------------------------
 # block application
 # ---------------------------------------------------------------------------
 
 
-def _apply_block(cfg, blk, p, x, positions, state, mode, max_len=None):
+def _apply_block(cfg, blk, p, x, positions, state, mode, max_len=None,
+                 paged=None):
     """Returns (x_out, new_state, aux)."""
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
     new_state = state
+    if mode in ("paged_prefill", "paged_decode") and blk.mixer != "attn":
+        raise ValueError(
+            f"paged serving requires attention mixers, got {blk.mixer}")
     if blk.mixer == "attn":
         if mode == "train":
             mix = attention.attend_train(p["mixer"], cfg, blk, h, positions)
         elif mode == "prefill":
             mix, new_state = attention.prefill(p["mixer"], cfg, blk, h,
                                                positions, max_len=max_len)
+        elif mode == "paged_prefill":
+            mix, new_state = attention.paged_prefill_chunk(
+                p["mixer"], cfg, blk, h, state, paged["block_table"],
+                paged["start"])
+        elif mode == "paged_decode":
+            mix, new_state = attention.paged_decode(
+                p["mixer"], cfg, blk, h, state, paged["block_tables"],
+                paged["lengths"])
         else:
             mix, new_state = attention.decode(p["mixer"], cfg, blk, h, state)
     elif blk.mixer == "mlstm":
@@ -252,8 +305,11 @@ def embed_inputs(params, cfg, inputs: dict, pos_offset) -> jnp.ndarray:
         x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
     if not cfg.use_rope:
         S = x.shape[1]
-        pos = pos_offset + jnp.arange(S)
-        x = x + sinusoidal_positions(pos, cfg.d_model)[None].astype(x.dtype)
+        pos = pos_offset + jnp.arange(S)   # (S,) or (B, S) if offset (B, 1)
+        pe = sinusoidal_positions(pos, cfg.d_model)
+        if pe.ndim == 2:
+            pe = pe[None]
+        x = x + pe.astype(x.dtype)
     return sharding.act(x, "batch", "seq", None)
 
 
@@ -274,7 +330,8 @@ def apply_head(params, cfg, x) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def _scan_layers(cfg, layers, x, positions, states, mode, max_len=None):
+def _scan_layers(cfg, layers, x, positions, states, mode, max_len=None,
+                 paged=None):
     """Grouped scan over layers.  Returns (x, new_states, aux_sum)."""
     pattern = cfg.layer_pattern()
     P = len(cfg.pattern)
@@ -290,7 +347,7 @@ def _scan_layers(cfg, layers, x, positions, states, mode, max_len=None):
                 xc, ns, a = _apply_block(cfg, pattern[j], gp[j], xc,
                                          positions,
                                          gs[j] if gs is not None else None,
-                                         mode, max_len=max_len)
+                                         mode, max_len=max_len, paged=paged)
                 new_gs.append(ns)
                 aux = aux + a
             return (xc, aux), new_gs
@@ -311,7 +368,7 @@ def _scan_layers(cfg, layers, x, positions, states, mode, max_len=None):
         st = states["rem"][j] if states is not None else None
         def blk_fn(p_, x_, st_, blk=blk):
             return _apply_block(cfg, blk, p_, x_, positions, st_, mode,
-                                max_len=max_len)
+                                max_len=max_len, paged=paged)
         if cfg.remat and mode == "train":
             blk_fn = jax.checkpoint(
                 blk_fn, policy=jax.checkpoint_policies.nothing_saveable)
@@ -324,14 +381,15 @@ def _scan_layers(cfg, layers, x, positions, states, mode, max_len=None):
     return x, new_states, aux_total
 
 
-def _flat_layers(cfg, layers, x, positions, states, mode, max_len=None):
+def _flat_layers(cfg, layers, x, positions, states, mode, max_len=None,
+                 paged=None):
     pattern = cfg.layer_pattern()
     aux_total = jnp.zeros((), jnp.float32)
     new_states = []
     for i, blk in enumerate(pattern):
         st = states["flat"][i] if states is not None else None
         x, ns, a = _apply_block(cfg, blk, layers["flat"][i], x, positions,
-                                st, mode, max_len=max_len)
+                                st, mode, max_len=max_len, paged=paged)
         new_states.append(ns)
         aux_total = aux_total + a
     return x, ({"flat": new_states} if mode != "train" else None), aux_total
@@ -342,30 +400,52 @@ def forward(params, cfg, inputs: dict, mode: str = "train",
             max_len: Optional[int] = None) -> dict:
     """Run the model.
 
-    train   : inputs {tokens[, patches]}         -> {hidden, aux}
-    prefill : inputs {tokens[, patches]}         -> {last_logits, states, aux}
-    decode  : inputs {tokens} + states           -> {logits, states}
+    train         : inputs {tokens[, patches]}   -> {hidden, aux}
+    prefill       : inputs {tokens[, patches]}   -> {last_logits, states, aux}
+    decode        : inputs {tokens} + states     -> {logits, states}
+    paged_prefill : inputs {tokens (1,C), start (), block_table (W,)}
+                    + paged states               -> {chunk_logits, states}
+    paged_decode  : inputs {tokens (B,1), block_tables (B,W), lengths (B,)}
+                    + paged states               -> {logits, states}
     """
+    paged = None
     if mode == "decode":
         # positions come from the per-layer state's pos counter
         pos0 = _first_pos(states)
         x = embed_inputs(params, cfg, inputs, pos0)
+    elif mode == "paged_prefill":
+        paged = {"block_table": inputs["block_table"],
+                 "start": inputs["start"]}
+        x = embed_inputs(params, cfg, inputs, inputs["start"])
+        pos0 = None
+    elif mode == "paged_decode":
+        paged = {"block_tables": inputs["block_tables"],
+                 "lengths": inputs["lengths"]}
+        x = embed_inputs(params, cfg, inputs, inputs["lengths"][:, None])
+        pos0 = None
     else:
         x = embed_inputs(params, cfg, inputs, 0)
         pos0 = None
     S = x.shape[1]
-    positions = (jnp.arange(S) if mode != "decode"
-                 else (pos0 + jnp.arange(1)))
+    if mode == "decode":
+        positions = pos0 + jnp.arange(1)
+    else:
+        # paged modes compute absolute positions inside the attention layer
+        # (from start / lengths); this drives nothing there.
+        positions = jnp.arange(S)
 
     run = _scan_layers if cfg.scan_layers else _flat_layers
     x, new_states, aux = run(cfg, params["layers"], x, positions, states,
-                             mode, max_len=max_len)
+                             mode, max_len=max_len, paged=paged)
 
     out: Dict[str, Any] = {"aux": aux}
     if mode == "train":
         out["hidden"] = x
     elif mode == "prefill":
         out["last_logits"] = apply_head(params, cfg, x[:, -1:])[:, 0]
+        out["states"] = new_states
+    elif mode == "paged_prefill":
+        out["chunk_logits"] = apply_head(params, cfg, x)   # (1, C, V...)
         out["states"] = new_states
     else:
         out["logits"] = apply_head(params, cfg, x)[:, 0]

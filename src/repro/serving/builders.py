@@ -21,8 +21,14 @@ def default_depths(n_edge: int) -> List[int]:
 def build_engines(arch: str, n_edge: int, max_len: int, *,
                   kv_slots: int = 4, sample: bool = False,
                   depths: Optional[Sequence[int]] = None,
-                  seed0: int = 0) -> List[ServeEngine]:
-    """n_edge reduced-config replicas of ``arch`` with per-engine depth."""
+                  seed0: int = 0, paged: Optional[bool] = None,
+                  page_size: int = 16, max_lanes: Optional[int] = None,
+                  prefill_chunk: int = 64) -> List[ServeEngine]:
+    """n_edge reduced-config replicas of ``arch`` with per-engine depth.
+
+    ``paged=None`` auto-selects the shared page pool on all-attention
+    configs and the dense slot pool elsewhere; the remaining paged knobs
+    are ignored by dense engines."""
     depths = list(depths) if depths is not None else default_depths(n_edge)
     engines = []
     for i in range(n_edge):
@@ -30,7 +36,10 @@ def build_engines(arch: str, n_edge: int, max_len: int, *,
                                   num_layers=depths[i])
         params = init_params(jax.random.key(seed0 + i), cfg)
         engines.append(ServeEngine(cfg, params, max_len=max_len,
-                                   kv_slots=kv_slots, sample=sample))
+                                   kv_slots=kv_slots, sample=sample,
+                                   paged=paged, page_size=page_size,
+                                   max_lanes=max_lanes,
+                                   prefill_chunk=prefill_chunk))
     return engines
 
 

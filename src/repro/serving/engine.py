@@ -1,14 +1,30 @@
 """Continuous-batching serving engine: the per-ES "DEdgeAI worker".
 
-One engine wraps one model replica with a FIXED pool of KV slots.
-Requests are ``admit()``-ed into a queue; each ``step()``
+One engine wraps one model replica and serves admitted requests with one
+of two KV memory models:
 
-  1. refills free slots from the queue — one batch-1 prefill per joining
-     request, whose cache is written into the slot pool, and
-  2. runs ONE batched decode round across all occupied slots (a jitted
-     ``vmap`` over the per-slot caches, so every slot keeps its own
-     ``pos`` counter and requests can join/leave mid-flight), freeing the
-     slots of requests that hit their token budget.
+**Dense slot pool** (fallback, any arch family).  A FIXED pool of
+``kv_slots`` per-request caches, each ``max_len`` deep.  Each ``step()``
+runs one blocking batch-1 prefill per joining request, then ONE batched
+decode round (a jitted ``vmap`` over the per-slot caches).  Capacity is
+``kv_slots`` concurrent requests, full stop — a 32-token request holds a
+``max_len``-deep cache hostage for its whole lifetime.
+
+**Paged page pool** (all-attention configs; auto-detected).  KV memory is
+a single shared pool of fixed-size pages per layer (vLLM-style), and each
+request holds only ``ceil((prompt + max_new_tokens) / page_size)`` pages
+named by a per-request block table (see repro.serving.paged_kv).
+Admission is gated on *free pages*, not free slots, so many short
+requests can be in flight at once — up to ``max_lanes`` — inside the same
+KV budget that gave the dense pool ``kv_slots``.  Prefill is CHUNKED:
+each step advances every still-prefilling lane by one ``prefill_chunk``-
+token chunk and then runs one decode round across the lanes that have
+finished prefilling — a long prompt no longer blocks the decode batch,
+it interleaves with it.  Worst-case pages are reserved at admission
+(generation length is deterministic), so admitted requests never
+deadlock waiting for memory.  ``prefill_chunk`` trades time-to-first-
+token for interleaving granularity: smaller chunks give decode lanes
+more frequent turns, larger chunks amortise the per-chunk gather.
 
 Per-request latency is MEASURED, not modelled: the Request lifecycle
 timestamps (queue / prefill / decode) decompose the serving-side terms of
@@ -29,7 +45,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cluster.request import Request
-from repro.train.steps import make_decode_step, make_prefill_step
+from repro.serving.paged_kv import BlockTable, PagePool, cdiv, paged_supported
+from repro.train.steps import (make_decode_step, make_paged_decode_step,
+                               make_paged_prefill_step, make_prefill_step)
 
 
 @dataclasses.dataclass
@@ -52,45 +70,94 @@ class RequestResult:
         return self.prefill_s + self.decode_s + self.queue_s
 
 
+@dataclasses.dataclass
+class _Lane:
+    """One in-flight request in the paged engine."""
+
+    req: Request
+    table: BlockTable
+    prompt_len: int
+    chunk_pos: int = 0       # next prompt position to prefill
+    length: int = 0          # KV positions written so far
+    last_tok: Optional[np.ndarray] = None
+
+    @property
+    def decoding(self) -> bool:
+        return self.chunk_pos >= self.prompt_len
+
+
 class ServeEngine:
     """Continuous-batching engine for one model replica."""
 
     def __init__(self, cfg, params, *, max_len: int = 256,
                  kv_slots: int = 4, sample: bool = False,
                  temperature: float = 1.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 paged: Optional[bool] = None, page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 max_lanes: Optional[int] = None,
+                 prefill_chunk: int = 64):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.kv_slots = kv_slots
         self.sample = sample
         self._clock = clock
-        self._prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
-        self._decode1 = make_decode_step(cfg, sample=sample,
-                                         temperature=temperature)
         self._queue: collections.deque = collections.deque()
-        self._slots: List[Optional[Request]] = [None] * kv_slots
-        self._last_tok: List[Optional[np.ndarray]] = [None] * kv_slots
-        self._pool_states = None       # (slots, ...) stacked per-slot caches
-        self._pool_decode = None
-        self._insert = None
         self._zero_tok = np.zeros(
             (1, cfg.num_codebooks) if cfg.num_codebooks else (1,), np.int32)
         self._rng = jax.random.key(0)
         self._ewma_tok_s = 0.0         # measured seconds per decode round
         self._next_rid = 0
+        self.peak_inflight = 0
+
+        self.paged = paged_supported(cfg) if paged is None else bool(paged)
+        if self.paged:
+            self.page_size = page_size
+            self.prefill_chunk = prefill_chunk
+            if num_pages is None:
+                # same KV token budget the dense pool would hold, plus the
+                # reserved null page — the win is sharing, not more memory
+                num_pages = 1 + kv_slots * cdiv(max_len, page_size)
+            self.num_pages = num_pages
+            self.max_lanes = max_lanes or 2 * kv_slots
+            # fixed jit-stable block-table width: a max_len request plus
+            # null padding for chunked-prefill overshoot writes
+            self._row_width = (cdiv(max_len, page_size)
+                               + cdiv(prefill_chunk, page_size) + 1)
+            self._pool = PagePool(num_pages, page_size)
+            self._lanes: List[Optional[_Lane]] = [None] * self.max_lanes
+            self._paged_states = None   # built lazily on first admission
+            self._paged_prefill = jax.jit(make_paged_prefill_step(cfg))
+            self._paged_decode = jax.jit(make_paged_decode_step(
+                cfg, sample=sample, temperature=temperature))
+        else:
+            self._prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
+            self._decode1 = make_decode_step(cfg, sample=sample,
+                                             temperature=temperature)
+            self._slots: List[Optional[Request]] = [None] * kv_slots
+            self._last_tok: List[Optional[np.ndarray]] = [None] * kv_slots
+            self._pool_states = None   # (slots, ...) stacked per-slot caches
+            self._pool_decode = None
+            self._insert = None
 
     # ------------------------------------------------------------------
     # continuous-batching core
     # ------------------------------------------------------------------
     def admit(self, req: Request) -> None:
-        """Enqueue a request; it joins the decode batch when a slot frees."""
+        """Enqueue a request; it joins the decode batch when capacity
+        (a dense slot, or a lane + enough free pages) opens up."""
         req.t_enqueue = self._clock()
         req.engine_id = getattr(self, "engine_id", None)
         self._queue.append(req)
 
     def step(self) -> List[Request]:
         """One scheduling iteration; returns requests finished this step."""
+        if self.paged:
+            return self._step_paged()
+        return self._step_dense()
+
+    def _step_dense(self) -> List[Request]:
         finished = []
         free = [i for i, r in enumerate(self._slots) if r is None]
         while free and self._queue:
@@ -114,6 +181,7 @@ class ServeEngine:
                                              jnp.int32(i))
             self._slots[i] = req
             self._last_tok[i] = tok
+        self._note_inflight(sum(r is not None for r in self._slots))
 
         active = [i for i, r in enumerate(self._slots) if r is not None]
         if active:
@@ -125,11 +193,7 @@ class ServeEngine:
                 self.params, jnp.asarray(toks[..., None], jnp.int32),
                 self._pool_states, keys)
             tok_all = np.asarray(tok_all)          # blocks until ready
-            # a round advances every occupied slot one token, so the
-            # per-token drain rate is round time / active lanes
-            dt = (self._clock() - t0) / len(active)
-            self._ewma_tok_s = (0.7 * self._ewma_tok_s + 0.3 * dt
-                                if self._ewma_tok_s else dt)
+            self._note_round(t0, len(active))
             now = self._clock()
             for i in active:
                 req = self._slots[i]
@@ -142,6 +206,108 @@ class ServeEngine:
                     self._slots[i] = None
         return finished
 
+    # ------------------------------------------------------------------
+    # paged step: page-gated admission, chunked prefill, decode round
+    # ------------------------------------------------------------------
+    def _step_paged(self) -> List[Request]:
+        finished = []
+        # 1. admission — head-of-line, gated on free pages (worst case
+        # reserved up front) and a free lane.  No queue skipping: FCFS
+        # order is what the cluster schedulers assume.
+        free = [i for i, ln in enumerate(self._lanes) if ln is None]
+        while free and self._queue:
+            req = self._queue[0]
+            total = self._prompt_len(req) + req.max_new_tokens
+            need = self._pool.pages_needed(total)
+            if need > self._row_width - 1 - cdiv(self.prefill_chunk,
+                                                 self.page_size):
+                raise ValueError(
+                    f"request needs {need} pages > per-request capacity "
+                    f"(max_len={self.max_len})")
+            if not self._pool.can_alloc(need):
+                break
+            self._queue.popleft()
+            i = free.pop(0)
+            self._lanes[i] = _Lane(req=req,
+                                   table=BlockTable(self._pool, total),
+                                   prompt_len=self._prompt_len(req))
+        self._note_inflight(sum(ln is not None for ln in self._lanes))
+
+        # 2. one prefill chunk per still-prefilling lane
+        self._ensure_paged_states()
+        C = self.prefill_chunk
+        for i, lane in enumerate(self._lanes):
+            if lane is None or lane.decoding:
+                continue
+            req = lane.req
+            if lane.chunk_pos == 0:
+                req.t_prefill_start = self._clock()
+            c0 = lane.chunk_pos
+            chunk = np.asarray(req.prompt[..., c0:c0 + C])
+            pad = C - chunk.shape[-1]
+            if pad:
+                widths = [(0, 0)] * (chunk.ndim - 1) + [(0, pad)]
+                chunk = np.pad(chunk, widths)
+            row = jnp.asarray(lane.table.row(self._row_width), jnp.int32)
+            logits, self._paged_states = self._paged_prefill(
+                self.params,
+                {"tokens": jnp.asarray(chunk, jnp.int32),
+                 "start": jnp.asarray(c0, jnp.int32), "block_table": row},
+                self._paged_states)
+            lane.chunk_pos = c0 + C
+            lane.length = min(lane.chunk_pos, lane.prompt_len)
+            if lane.decoding:                      # last chunk of prompt
+                last = lane.prompt_len - 1 - c0
+                tok = np.asarray(self._pick(logits[0, last][None]))
+                req.t_prefill_end = self._clock()
+                req.tokens.append(tok)
+                lane.last_tok = tok
+                if len(req.tokens) >= req.max_new_tokens:
+                    req.t_finish = req.t_prefill_end
+                    finished.append(req)
+                    self._free_lane(i)
+
+        # 3. one decode round across the lanes that finished prefilling;
+        # idle/prefilling lanes ride along masked (null table, length 0)
+        active = [i for i, ln in enumerate(self._lanes)
+                  if ln is not None and ln.decoding]
+        if active:
+            L, W = self.max_lanes, self._row_width
+            toks = np.zeros((L,) + self._zero_tok.shape, np.int32)
+            tables = np.zeros((L, W), np.int32)
+            lengths = np.zeros((L,), np.int32)
+            for i in active:
+                lane = self._lanes[i]
+                toks[i] = lane.last_tok
+                tables[i] = lane.table.row(W)
+                lengths[i] = lane.length
+            if self.cfg.num_codebooks:
+                tok_in = toks.transpose(0, 2, 1)   # (L,1,K) -> (L,K,1)
+            else:
+                tok_in = toks                      # (L,1)
+            t0 = self._clock()
+            _, tok_all, self._paged_states = self._paged_decode(
+                self.params,
+                {"tokens": jnp.asarray(tok_in, jnp.int32),
+                 "block_tables": jnp.asarray(tables, jnp.int32),
+                 "lengths": jnp.asarray(lengths, jnp.int32)},
+                self._paged_states, self._next_key())
+            tok_np = np.asarray(tok_all)           # blocks until ready
+            self._note_round(t0, len(active))
+            now = self._clock()
+            for i in active:
+                lane = self._lanes[i]
+                req = lane.req
+                tk = tok_np[i:i + 1]               # (1,) or (1, K)
+                req.tokens.append(tk)
+                lane.last_tok = tk
+                lane.length += 1                   # decode wrote one KV
+                if len(req.tokens) >= req.max_new_tokens:
+                    req.t_finish = now
+                    finished.append(req)
+                    self._free_lane(i)
+        return finished
+
     def run_to_completion(self, max_steps: int = 1_000_000) -> List[Request]:
         """Step until queue and slots drain; returns finished requests."""
         done = []
@@ -152,24 +318,41 @@ class ServeEngine:
         return done
 
     def reset(self) -> None:
-        """Drop queued/in-flight work (pool caches are overwritten on use)."""
+        """Drop queued/in-flight work and measurement state.
+
+        Device pool contents need no zeroing — every KV position is
+        written before it is read — but the rate EWMA and the request-id
+        counter must restart or a reused engine reports the previous
+        run's backlog estimate and non-monotonic request ids."""
         self._queue.clear()
-        self._slots = [None] * self.kv_slots
-        self._last_tok = [None] * self.kv_slots
+        self._ewma_tok_s = 0.0
+        self._next_rid = 0
+        self.peak_inflight = 0
+        if self.paged:
+            self._lanes = [None] * self.max_lanes
+            self._pool.reset()
+        else:
+            self._slots = [None] * self.kv_slots
+            self._last_tok = [None] * self.kv_slots
 
     # ------------------------------------------------------------------
     # backlog signals (the scheduler's q_b / Eqn-3 observation)
     # ------------------------------------------------------------------
+    def _inflight_requests(self) -> List[Request]:
+        if self.paged:
+            return [ln.req for ln in self._lanes if ln is not None]
+        return [r for r in self._slots if r is not None]
+
     @property
     def has_work(self) -> bool:
-        return bool(self._queue) or any(r is not None for r in self._slots)
+        return bool(self._queue) or bool(self._inflight_requests())
 
     @property
     def pending_tokens(self) -> int:
         """Tokens still to generate across queued + in-flight requests."""
         n = sum(r.max_new_tokens for r in self._queue)
         n += sum(r.max_new_tokens - len(r.tokens)
-                 for r in self._slots if r is not None)
+                 for r in self._inflight_requests())
         return n
 
     @property
@@ -219,6 +402,30 @@ class ServeEngine:
                                           ).astype(jnp.int32)
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
+    @staticmethod
+    def _prompt_len(req: Request) -> int:
+        return int(req.prompt.shape[-1])
+
+    def _note_round(self, t0: float, active: int) -> None:
+        # a round advances every active lane one token, so the per-token
+        # drain rate is round time / active lanes
+        dt = (self._clock() - t0) / active
+        self._ewma_tok_s = (0.7 * self._ewma_tok_s + 0.3 * dt
+                            if self._ewma_tok_s else dt)
+
+    def _note_inflight(self, n: int) -> None:
+        self.peak_inflight = max(self.peak_inflight, n)
+
+    def _free_lane(self, i: int) -> None:
+        self._lanes[i].table.release()
+        self._lanes[i] = None
+
+    def _ensure_paged_states(self) -> None:
+        if self._paged_states is None:
+            from repro.models.transformer import init_paged_states
+            self._paged_states = init_paged_states(
+                self.cfg, self.num_pages, self.page_size)
+
     def _ensure_pool(self, st):
         """Lazily build the slot pool + jitted batched decode from the
         structure of the first prefill's cache (covers every arch family:
@@ -260,7 +467,8 @@ def serve_batch(engines: List[ServeEngine], assignments: List[int],
         engines[assignments[i]].admit(req)
     while any(e.has_work for e in engines):
         for e in engines:
-            e.step()
+            if e.has_work:      # an idle engine's step() is not free:
+                e.step()        # it still pays host-side bookkeeping
     return [RequestResult(tokens=r.tokens, prefill_s=r.prefill_s,
                           decode_s=r.decode_s, queue_s=r.queue_s)
             for r in reqs]

@@ -1,0 +1,117 @@
+"""Host-side page-pool accounting for paged KV serving.
+
+The device side (repro.models.attention / kernels.decode_attention) sees
+only arrays: per-layer pools (num_pages, KV, page_size, hd) and int32
+block tables.  This module owns the *allocation* story:
+
+``PagePool``
+    A free-list over physical page ids 1..num_pages-1.  Page 0 is
+    reserved as the null page — block-table padding, masked decode lanes
+    and clamped overshoot writes all land there, so it is never handed
+    out.  Pages are interchangeable (any page can back any logical
+    position of any sequence), which is what makes the pool
+    fragmentation-free: freeing a sequence returns its pages to the list
+    and any later request can reuse them, regardless of allocation order.
+
+``BlockTable``
+    Per-sequence logical->physical page mapping.  ``row(width)`` pads the
+    mapped pages with null-page zeros up to a fixed width so every lane's
+    table has the same shape under jit; reads past the mapped range are
+    masked by length, and chunked-prefill overshoot writes clamp onto the
+    null padding.
+
+The engine reserves worst-case pages at admission
+(``pages_needed(prompt + max_new_tokens)``): generation length is
+deterministic here, so reservation is exact and admitted requests can
+never deadlock waiting for pages mid-generation.
+"""
+from __future__ import annotations
+
+from typing import List
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class PagePool:
+    """Free-list allocator over physical KV pages.
+
+    ``num_pages`` counts the whole pool *including* the reserved null
+    page 0, matching the leading axis of the device-side pool arrays.
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need at least one allocatable page + null")
+        if page_size < 1:
+            raise ValueError("page_size must be positive")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # LIFO: recently freed (cache-warm) pages are reused first
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._allocated: set = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def pages_needed(self, tokens: int) -> int:
+        return cdiv(max(tokens, 0), self.page_size)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: want {n}, have {len(self._free)}")
+        pages = [self._free.pop() for _ in range(n)]
+        self._allocated.update(pages)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if p not in self._allocated:
+                raise RuntimeError(f"double free / foreign page {p}")
+            self._allocated.discard(p)
+            self._free.append(p)
+
+    def reset(self) -> None:
+        self._free = list(range(self.num_pages - 1, 0, -1))
+        self._allocated.clear()
+
+
+class BlockTable:
+    """One sequence's logical->physical page list."""
+
+    def __init__(self, pool: PagePool, tokens: int):
+        self.pool = pool
+        self.pages: List[int] = pool.alloc(pool.pages_needed(tokens))
+
+    def row(self, width: int) -> List[int]:
+        """Fixed-width table row, null-padded (page 0) past the mapping."""
+        if len(self.pages) > width:
+            raise ValueError(
+                f"{len(self.pages)} pages do not fit a width-{width} row")
+        return self.pages + [0] * (width - len(self.pages))
+
+    def release(self) -> None:
+        if self.pages:
+            self.pool.free(self.pages)
+            self.pages = []
+
+
+def paged_supported(cfg) -> bool:
+    """Whether a config can be served from a shared page pool.
+
+    Requires every block to be full (unwindowed) attention with a
+    model-dtype cache; recurrent mixers, ring-buffer windows and int8
+    caches keep the dense per-slot path.
+    """
+    if cfg.kv_cache_dtype == "int8":
+        return False
+    if getattr(cfg, "vision_patches", 0):
+        return False
+    return all(b.mixer == "attn" and b.window is None
+               for b in cfg.layer_pattern())

@@ -122,6 +122,43 @@ def make_decode_step(cfg, sample: bool = False, temperature: float = 1.0):
     return decode_step
 
 
+def make_paged_prefill_step(cfg):
+    """One prompt chunk into the shared page pool (batch 1).
+
+    batch = {tokens (1, C), start (), block_table (W,)}; returns
+    (chunk_logits (1, C, V...), new page pools).  The engine calls this
+    once per chunk with a fixed C so the jit cache stays single-entry.
+    """
+    def paged_prefill_step(params, batch, states):
+        params = _maybe_hoist(cfg, params)
+        out = forward(params, cfg, batch, mode="paged_prefill",
+                      states=states)
+        return out["chunk_logits"], out["states"]
+
+    return paged_prefill_step
+
+
+def make_paged_decode_step(cfg, sample: bool = False,
+                           temperature: float = 1.0):
+    """One decode token per lane over the shared page pool.
+
+    batch = {tokens (B, 1), block_tables (B, W), lengths (B,)}; inactive
+    lanes carry all-null tables and length 0, and their tokens are
+    ignored by the engine.
+    """
+    def paged_decode_step(params, batch, states, rng=None):
+        params = _maybe_hoist(cfg, params)
+        out = forward(params, cfg, batch, mode="paged_decode", states=states)
+        logits = out["logits"]
+        if sample:
+            tok = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(logits, axis=-1)
+        return logits, tok.astype(jnp.int32), out["states"]
+
+    return paged_decode_step
+
+
 def make_eval_step(cfg):
     """Forward-only loss (validation)."""
     def eval_step(params, batch):

@@ -24,11 +24,12 @@ ACFG = AgentConfig(train_after=10, replay_capacity=60, batch_size=16,
                    diffusion=DiffusionPolicyConfig(num_steps=2))
 
 
-def _engine(num_layers=2, kv_slots=2, max_len=40, seed=0):
+def _engine(num_layers=2, kv_slots=2, max_len=40, seed=0, **kw):
     cfg = dataclasses.replace(reduced(get_config("qwen2-1.5b")),
                               num_layers=num_layers)
     params = init_params(jax.random.key(seed), cfg)
-    return ServeEngine(cfg, params, max_len=max_len, kv_slots=kv_slots)
+    return ServeEngine(cfg, params, max_len=max_len, kv_slots=kv_slots,
+                       **kw)
 
 
 def _prompt(engine, n=1, S=8, seed=0):
@@ -85,8 +86,12 @@ def test_continuous_batching_late_request_overtakes():
 
 
 def test_slot_reuse_after_free():
-    """Freed slots are refilled from the queue; pool stays fixed-size."""
-    engine = _engine(kv_slots=1)
+    """Freed slots are refilled from the queue; pool stays fixed-size.
+
+    Pinned to the dense slot engine: under the paged pool both requests
+    fit in flight at once and the second never waits (that behavior is
+    covered in test_paged_kv)."""
+    engine = _engine(kv_slots=1, paged=False)
     prompts = _prompt(engine, 1, 8)
     a = Request(rid=0, prompt=prompts, max_new_tokens=2)
     b = Request(rid=1, prompt=prompts, max_new_tokens=2)
