@@ -20,8 +20,10 @@ Mapping to the paper:
   fig7b    -> Fig. 7b  delay vs number of BSs
   fig8     -> Fig. 8   denoising steps I / entropy temperature alpha
   tablev   -> Table V  centralized vs distributed serving makespan
-  closedloop -> (systems) Poisson trace through N live continuous-batching
-              engines under LAD-TS vs baselines (mean/p95 service delay)
+  closedloop -> (systems) mixed-QoS Poisson trace through a heterogeneous
+              live fleet (paged + dense engines) under LAD-TS vs baselines
+              incl. deadline-aware (per-class p50/p95/p99, miss rate,
+              priority-weighted goodput)
   kernels  -> (systems) Pallas kernel microbenches
   roofline -> (systems) dry-run roofline terms per (arch x shape x mesh)
 """

@@ -2,18 +2,19 @@
 
 ``bench_tablev``       — Table-V analog: total generation delay, centralized
                          vs DEdgeAI-style distributed serving, smoke scale.
-``bench_closed_loop``  — the repo's first apples-to-apples "paper policy vs
-                         baselines on real engines" number: a Poisson
-                         arrival trace replayed through N continuous-
-                         batching engines under each scheduler, reporting
-                         throughput and mean / p50 / p95 / p99 service
-                         delay per scheduler (CSV rows + JSON records),
-                         plus the same schedulers evaluated in the
-                         ``core.env`` simulator through the identical
-                         interface.  The live engines serve from the
-                         shared KV page pool, so the per-scheduler
-                         ``peak_inflight`` exceeds what the old
-                         slot-partitioned cache allowed.
+``bench_closed_loop``  — the repo's apples-to-apples "paper policy vs
+                         baselines on real engines" number, now on a
+                         HETEROGENEOUS fleet under a mixed-QoS workload:
+                         a Poisson trace of interactive / standard /
+                         batch requests replayed through engines hosting
+                         DIFFERENT model-zoo configs (attention models
+                         on the paged KV pool next to dense-slot xLSTM),
+                         reporting per-scheduler AND per-QoS-class
+                         p50/p95/p99 service delay, deadline-miss rate,
+                         and priority-weighted goodput (CSV rows + JSON
+                         records), plus the same schedulers evaluated in
+                         the ``core.env`` simulator on the identical
+                         extended Eqn-6 observation.
 """
 from __future__ import annotations
 
@@ -29,7 +30,13 @@ from repro.core.agents import AgentConfig
 from repro.core.diffusion import DiffusionPolicyConfig
 from repro.core.env import EnvParams
 from repro.core.trainer import train_method
-from repro.serving.builders import build_engines, warmup
+from repro.serving.builders import build_engines, build_fleet, warmup
+from repro.workload import BEST_EFFORT, INTERACTIVE, STANDARD, scaled
+
+# Default heterogeneous fleet for the closed loop: two arch families
+# (attention -> paged KV pool, xLSTM -> dense slot pool) at different
+# parameter scales, cycled over the edge servers.
+FLEET_ARCHS = ("qwen2-1.5b", "starcoder2-3b", "xlstm-350m")
 
 
 def bench_tablev(num_requests=(1, 8, 32), prompt_len: int = 16,
@@ -79,25 +86,40 @@ def bench_tablev(num_requests=(1, 8, 32), prompt_len: int = 16,
     return rows
 
 
+def bench_qos_mix(gen_tokens: int):
+    """QoS mix rescaled to the benchmark's token scale: interactive
+    requests are short and prefer the smallest model, batch requests run
+    up to 3x the nominal generation length with no deadline."""
+    return ((scaled(INTERACTIVE, z_range=(1, gen_tokens),
+                    model_pref="xlstm-350m"), 0.4),
+            (scaled(STANDARD,
+                    z_range=(max(gen_tokens // 2, 1), 2 * gen_tokens)), 0.4),
+            (scaled(BEST_EFFORT,
+                    z_range=(gen_tokens, 3 * gen_tokens)), 0.2))
+
+
 def bench_closed_loop(scale: str = "quick", n_edge: int = 4,
                       num_requests: int = 24, rate: float = 96.0,
                       prompt_len: int = 32, gen_tokens: int = 8,
                       seed: int = 0, kv_slots: int = 2,
                       prefill_chunk: int = 16):
-    """Closed loop: train LAD-TS in the sim, then replay one Poisson trace
-    through the live cluster under the paper policy and each baseline.
+    """Closed loop: train LAD-TS in the QoS-enabled sim, then replay one
+    mixed-class Poisson trace through a HETEROGENEOUS live fleet under
+    the paper policy and each baseline (including deadline-aware).
 
-    The live engines run the paged KV path where the config supports it:
-    ``kv_slots`` sizes only the shared page-pool KV *budget*, and the
-    per-scheduler ``peak_inflight`` record shows concurrency exceeding
-    it (the dense engine at this budget could never hold more than
-    ``kv_slots`` requests).  ``prompt_len > prefill_chunk`` forces every
-    prompt through multi-chunk prefill interleaved with decode rounds.
+    The fleet cycles ``FLEET_ARCHS`` over the edge servers, so paged
+    attention engines and dense-slot xLSTM engines serve side by side;
+    each engine queue drains in priority/EDF order.  The schedulers see
+    the extended Eqn-6 observation ``[d, w, q_1..q_E, slack, c_1..c_E]``
+    in BOTH backends, and every record carries the per-QoS-class
+    breakdown (p50/p95/p99, deadline-miss rate, priority-weighted
+    goodput).
 
     Returns (csv_rows, json_records)."""
     paper = scale == "paper"
+    mix = bench_qos_mix(gen_tokens)
     p = EnvParams(num_bs=n_edge, num_slots=30 if paper else 8,
-                  max_tasks=12 if paper else 6)
+                  max_tasks=12 if paper else 6, qos_mix=mix)
     acfg = AgentConfig(train_after=120 if paper else 40,
                        replay_capacity=500 if paper else 200,
                        diffusion=DiffusionPolicyConfig(
@@ -111,46 +133,55 @@ def bench_closed_loop(scale: str = "quick", n_edge: int = 4,
             "lad-ts": PolicyScheduler("lad-ts", acfg, states,
                                       num_engines=n_edge,
                                       n_max=p.max_tasks),
+            "deadline": make_scheduler("deadline", n_edge),
             "jsq": make_scheduler("jsq", n_edge),
             "round-robin": make_scheduler("round-robin", n_edge),
             "random": make_scheduler("random", n_edge),
             "local": make_scheduler("local", n_edge),
         }
 
+    def qos_suffix(stats):
+        return (f";miss={stats.get('deadline_miss_rate', 0.0):.2f}"
+                f";goodput={stats.get('weighted_goodput', 0.0):.2f}")
+
     rows, records = [], []
     # --- same Scheduler interface against the core.env simulator ----------
     for name, s in scheds().items():
         t0 = time.monotonic()
         r = evaluate_scheduler(s, p, episodes=2, key=jax.random.key(1))
+        r.pop("carry", None)   # agent pytree, not JSON material
         wall = time.monotonic() - t0
         us = wall / max(r["count"], 1) * 1e6
         rows.append(f"closedloop_sim/{name},{us:.0f},"
-                    f"mean={r['mean_s']:.3f}s;p95={r['p95_s']:.3f}s")
+                    f"mean={r['mean_s']:.3f}s;p95={r['p95_s']:.3f}s"
+                    + qos_suffix(r))
         records.append({"bench": "closedloop_sim", "scheduler": name,
                         "wall_s": wall, **r})
 
-    # --- and against the live engines --------------------------------------
-    mcfg = reduced(get_config("qwen2-1.5b"))
-    # engines are provisioned for requests up to max_len; the trace's
-    # (prompt + gen) requests are smaller, so the page pool fits several
-    # of them inside one dense slot's worth of KV — that headroom is
-    # exactly what the slot-partitioned cache wasted
+    # --- and against the live heterogeneous fleet ---------------------------
+    archs = [FLEET_ARCHS[i % len(FLEET_ARCHS)] for i in range(n_edge)]
+    # engines are provisioned for requests up to max_len; batch-class
+    # requests generate up to 3 * gen_tokens, and the paged engines keep
+    # pooling whatever KV the short interactive requests leave free
     max_len = 3 * (prompt_len + gen_tokens)
-    engines = build_engines("qwen2-1.5b", n_edge, max_len,
-                            depths=[2 + (i % 2) for i in range(n_edge)],
-                            seed0=1, kv_slots=kv_slots,
-                            prefill_chunk=prefill_chunk,
-                            max_lanes=4 * kv_slots)
+    engines = build_fleet(archs, max_len,
+                          depths=[2 + (i % 2) for i in range(n_edge)],
+                          seed0=1, kv_slots=kv_slots,
+                          prefill_chunk=prefill_chunk,
+                          max_lanes=4 * kv_slots)
+    # one trace must tokenize for every engine in the mixed fleet
+    vocab = min(e.cfg.vocab_size for e in engines)
     warmup(engines, prompt_len)
     for name, s in scheds().items():
         for e in engines:
             e.reset()
-        cluster = EdgeCluster(engines, s, seed=seed)
+        cluster = EdgeCluster(engines, s, seed=seed, qos_obs=True)
         trace = poisson_trace(num_requests, rate=rate,
                               prompt_len=prompt_len,
                               max_new_tokens=gen_tokens,
-                              vocab_size=mcfg.vocab_size,
-                              num_origins=n_edge, seed=seed + 1)
+                              vocab_size=vocab,
+                              num_origins=n_edge, seed=seed + 1,
+                              qos_mix=mix)
         t0 = time.monotonic()
         stats = summarize(cluster.run(trace))
         wall = time.monotonic() - t0
@@ -161,12 +192,13 @@ def bench_closed_loop(scale: str = "quick", n_edge: int = 4,
                     f"p50={stats['p50_s']:.3f}s;"
                     f"p95={stats['p95_s']:.3f}s;"
                     f"p99={stats['p99_s']:.3f}s;"
-                    f"peak_inflight={peak}")
+                    f"peak_inflight={peak}" + qos_suffix(stats))
         records.append({
             "bench": "closedloop_live", "scheduler": name,
             "wall_s": wall,
             "throughput_rps": stats["count"] / max(wall, 1e-9),
-            "paged": bool(engines[0].paged),
+            "fleet": [e.arch_id for e in engines],
+            "paged": [bool(e.paged) for e in engines],
             "kv_slots": kv_slots,
             "prefill_chunk": prefill_chunk,
             "prompt_len": prompt_len,

@@ -11,16 +11,17 @@
 """
 from repro.cluster.live import EdgeCluster, LiveObsConfig
 from repro.cluster.request import Request, poisson_trace, summarize
-from repro.cluster.schedulers import (BASELINES, JoinShortestQueueScheduler,
+from repro.cluster.schedulers import (BASELINES, DeadlineAwareScheduler,
+                                      JoinShortestQueueScheduler,
                                       LocalOnlyScheduler, PolicyScheduler,
                                       RandomScheduler, RoundRobinScheduler,
                                       Scheduler, make_scheduler)
 from repro.cluster.simulate import build_sim_episode, evaluate_scheduler
 
 __all__ = [
-    "BASELINES", "EdgeCluster", "JoinShortestQueueScheduler",
-    "LiveObsConfig", "LocalOnlyScheduler", "PolicyScheduler",
-    "RandomScheduler", "Request", "RoundRobinScheduler", "Scheduler",
-    "build_sim_episode", "evaluate_scheduler", "make_scheduler",
-    "poisson_trace", "summarize",
+    "BASELINES", "DeadlineAwareScheduler", "EdgeCluster",
+    "JoinShortestQueueScheduler", "LiveObsConfig", "LocalOnlyScheduler",
+    "PolicyScheduler", "RandomScheduler", "Request", "RoundRobinScheduler",
+    "Scheduler", "build_sim_episode", "evaluate_scheduler",
+    "make_scheduler", "poisson_trace", "summarize",
 ]

@@ -8,8 +8,18 @@ real requests onto continuous-batching ``ServeEngine`` workers.
 The observation handed to the scheduler mirrors Eqn (6):
 ``[d_n, workload_n, q_1..q_E]`` with d_n = prompt tokens, workload_n =
 requested generation length (the z_n quality demand), and q_e = engine
-backlog in pending tokens — each divided by a fixed scale so live features
-land in the same O(1) range the policies trained on.
+backlog in pending tokens — each divided by a fixed scale so live
+features land in the same O(1) range the policies trained on.
+
+QoS-extended observation (``repro.workload``): when the scheduler was
+built for the wider ``[.., slack, c_1..c_E]`` row, the cluster appends
+the request's remaining deadline budget and a per-engine model-affinity
+feature — the request's expected decode seconds on each engine, from the
+engine's measured per-token rate (its live f_b'), inflated by
+``pref_penalty`` on engines whose arch differs from the request's
+``model_pref``.  The observation width is validated at CONSTRUCTION time
+against ``scheduler.state_dim``, so a policy trained on the wrong
+``EnvParams`` fails with a clear message instead of inside jit.
 """
 from __future__ import annotations
 
@@ -27,11 +37,16 @@ from repro.cluster.schedulers import Scheduler
 
 @dataclasses.dataclass(frozen=True)
 class LiveObsConfig:
-    """Feature scales mapping token counts into the sim's O(1) obs range."""
+    """Feature scales mapping live measurements into the sim's O(1) range."""
 
     d_scale: float = 32.0      # prompt tokens
     w_scale: float = 16.0      # decode-token demand
     q_scale: float = 64.0      # backlog tokens
+    # QoS-extended features
+    slack_scale: float = 4.0   # seconds of remaining deadline budget
+    slack_cap: float = 16.0    # best-effort requests report this slack
+    c_scale: float = 1.0       # expected decode seconds on an engine
+    pref_penalty: float = 4.0  # affinity inflation off the preferred arch
 
 
 class EdgeCluster:
@@ -39,7 +54,8 @@ class EdgeCluster:
 
     def __init__(self, engines: Sequence, scheduler: Scheduler,
                  obs: Optional[LiveObsConfig] = None, seed: int = 0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 qos_obs: Optional[bool] = None):
         if scheduler.num_engines != len(engines):
             raise ValueError(
                 f"scheduler targets {scheduler.num_engines} engines, "
@@ -49,6 +65,23 @@ class EdgeCluster:
             e.engine_id = i
         self.scheduler = scheduler
         self.obs = obs or LiveObsConfig()
+        E = len(self.engines)
+        base_dim, qos_dim = 2 + E, 3 + 2 * E
+        sched_dim = getattr(scheduler, "state_dim", None)
+        if qos_obs is None:
+            qos_obs = sched_dim == qos_dim
+        self.qos_obs = bool(qos_obs)
+        self.obs_dim = qos_dim if self.qos_obs else base_dim
+        if sched_dim is not None and sched_dim != self.obs_dim:
+            raise ValueError(
+                f"scheduler {scheduler.name!r} expects state_dim="
+                f"{sched_dim}, but this {E}-engine cluster produces "
+                f"{self.obs_dim}-feature observations "
+                f"({'QoS-extended 3+2E' if self.qos_obs else 'base 2+E'}; "
+                f"base={base_dim}, extended={qos_dim}).  Train the policy "
+                f"on an EnvParams with num_bs={E} and "
+                f"{'qos_mix set' if not self.qos_obs else 'no qos_mix'}, "
+                f"or pass qos_obs= explicitly.")
         self.carry = scheduler.init_carry()
         self._key = jax.random.key(seed)
         self._count = 0
@@ -60,11 +93,29 @@ class EdgeCluster:
         """Eqn-6 style observation row for one arriving request."""
         q = np.asarray([e.pending_tokens for e in self.engines], np.float32)
         prompt_len = req.prompt.shape[-1]
-        s = np.concatenate([
-            np.asarray([prompt_len / self.obs.d_scale,
-                        req.max_new_tokens / self.obs.w_scale], np.float32),
-            q / self.obs.q_scale])
-        return jnp.asarray(s)
+        cols = [np.asarray([prompt_len / self.obs.d_scale,
+                            req.max_new_tokens / self.obs.w_scale],
+                           np.float32),
+                q / self.obs.q_scale]
+        if self.qos_obs:
+            budget = req.deadline_budget_s
+            if budget is None:
+                slack = self.obs.slack_cap
+            else:
+                elapsed = (0.0 if req.t_arrival is None
+                           else self._clock() - req.t_arrival)
+                slack = min(budget - elapsed, self.obs.slack_cap)
+            aff = np.asarray([req.max_new_tokens * e.est_token_seconds
+                              for e in self.engines], np.float32)
+            if req.model_pref is not None:
+                mismatch = np.asarray(
+                    [getattr(e, "arch_id", None) != req.model_pref
+                     for e in self.engines])
+                aff = np.where(mismatch, aff * self.obs.pref_penalty, aff)
+            cols.append(np.asarray([slack / self.obs.slack_scale],
+                                   np.float32))
+            cols.append(aff / self.obs.c_scale)
+        return jnp.asarray(np.concatenate(cols))
 
     def submit(self, req: Request) -> int:
         """Scheduler picks an engine; the request joins its queue."""
@@ -102,7 +153,7 @@ class EdgeCluster:
         # warm the scheduler's compiled select path outside the timed loop
         # (carry deliberately discarded: no counter/latent side effects)
         self.scheduler.select_one(
-            self.carry, jnp.zeros((2 + len(self.engines),), jnp.float32),
+            self.carry, jnp.zeros((self.obs_dim,), jnp.float32),
             0, 0, jax.random.key(0))
         t0 = self._clock()
         for _ in range(max_steps):

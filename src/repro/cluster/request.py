@@ -13,23 +13,37 @@ timestamps decompose the measured service delay exactly:
 ``arrival_s`` is the request's offset in a replayed trace; ``t_arrival``
 is stamped by the closed-loop driver so ``service_s`` additionally counts
 any scheduler-side wait before the engine ever saw the request.
+
+QoS (``repro.workload``): ``qos`` carries the request's service class
+(duck-typed — anything with ``name`` / ``priority`` / ``deadline_s``),
+``deadline_s`` is the ABSOLUTE trace-relative deadline (``arrival_s`` +
+the class budget, so deadlines are monotone with arrival inside a
+class), and ``missed`` is stamped at finish time by
+:meth:`Request.finish`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional
+import math
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 
-@dataclasses.dataclass
-class Request:
+@dataclasses.dataclass(eq=False)   # identity semantics: field-wise eq
+class Request:                     # would compare prompt arrays
     rid: int
     prompt: Any                       # (1, S) tokens or (1, K, S) audio
     max_new_tokens: int
     arrival_s: float = 0.0            # trace-relative arrival offset
     origin: int = 0                   # home BS / edge index
     patches: Any = None               # (1, P, D) vision patches or None
+
+    # QoS (repro.workload) -------------------------------------------------
+    qos: Any = None                   # service class (QoSClass-like)
+    deadline_s: Optional[float] = None  # absolute trace-relative deadline
+    model_pref: Optional[str] = None  # preferred arch id
+    missed: Optional[bool] = None     # stamped by finish()
 
     # lifecycle (engine clock, absolute seconds) ---------------------------
     t_arrival: Optional[float] = None       # stamped by the cluster driver
@@ -69,11 +83,32 @@ class Request:
         t0 = self.t_arrival if self.t_arrival is not None else self.t_enqueue
         return self.t_finish - t0
 
+    # -- QoS helpers ---------------------------------------------------
+    @property
+    def priority(self) -> float:
+        return float(getattr(self.qos, "priority", 1.0) or 1.0)
+
+    @property
+    def deadline_budget_s(self) -> Optional[float]:
+        """Allowed service time (deadline relative to arrival)."""
+        if self.deadline_s is None:
+            return None
+        return self.deadline_s - self.arrival_s
+
+    def finish(self, t: float) -> None:
+        """Stamp completion and resolve the deadline verdict."""
+        self.t_finish = t
+        budget = self.deadline_budget_s
+        if budget is not None:
+            self.missed = bool(self.service_s > budget)
+
 
 def poisson_trace(num_requests: int, rate: float, prompt_len: int,
                   max_new_tokens: int, vocab_size: int, *,
                   num_origins: int = 1, min_new_tokens: int = 1,
-                  num_codebooks: int = 0, seed: int = 0) -> List[Request]:
+                  num_codebooks: int = 0, seed: int = 0,
+                  qos_mix: Optional[Sequence[Tuple[Any, float]]] = None
+                  ) -> List[Request]:
     """Poisson arrival trace with heterogeneous decode demand.
 
     Inter-arrival times are Exp(rate); the per-request generation length is
@@ -81,37 +116,136 @@ def poisson_trace(num_requests: int, rate: float, prompt_len: int,
     makes continuous batching matter (short requests should overtake long
     ones mid-flight).  Prompt length is fixed so one prefill compile serves
     the whole trace.
+
+    With ``qos_mix`` (a sequence of ``(QoSClass, weight)`` pairs) each
+    request additionally draws a service class: the generation length
+    comes from the class ``z_range``, ``deadline_s`` becomes the absolute
+    arrival-relative deadline (``arrival + class budget``; best-effort
+    classes get none), ``model_pref`` passes through, and a per-class
+    ``prompt_len`` overrides the trace-level prompt length (mixed
+    prompt-length distributions).  Sampling is driven by the same seeded
+    generator, so a trace is fully deterministic given ``seed``.
     """
     import jax
     import jax.numpy as jnp
 
     rng = np.random.default_rng(seed)
+    classes, probs = None, None
+    if qos_mix:
+        classes = [c for c, _ in qos_mix]
+        w = np.asarray([float(x) for _, x in qos_mix], np.float64)
+        if w.sum() <= 0:
+            raise ValueError("qos_mix weights must sum to a positive value")
+        probs = w / w.sum()
     t = 0.0
     reqs = []
     for r in range(num_requests):
         t += float(rng.exponential(1.0 / max(rate, 1e-9)))
-        shape = ((1, num_codebooks, prompt_len) if num_codebooks
-                 else (1, prompt_len))
+        qos = deadline = pref = None
+        plen = prompt_len
+        if classes is not None:
+            qos = classes[int(rng.choice(len(classes), p=probs))]
+            lo, hi = qos.z_range
+            new_tokens = int(rng.integers(lo, hi + 1))
+            budget = float(getattr(qos, "deadline_s", math.inf))
+            if math.isfinite(budget):
+                deadline = t + budget
+            pref = getattr(qos, "model_pref", None)
+            if getattr(qos, "prompt_len", None):
+                plen = int(qos.prompt_len)
+        else:
+            new_tokens = int(rng.integers(min_new_tokens,
+                                          max_new_tokens + 1))
+        shape = ((1, num_codebooks, plen) if num_codebooks
+                 else (1, plen))
         prompt = jax.random.randint(jax.random.key(seed * 100_003 + r),
                                     shape, 0, vocab_size, jnp.int32)
         reqs.append(Request(
             rid=r, prompt=prompt,
-            max_new_tokens=int(rng.integers(min_new_tokens,
-                                            max_new_tokens + 1)),
+            max_new_tokens=new_tokens,
             arrival_s=t,
-            origin=int(rng.integers(0, num_origins))))
+            origin=int(rng.integers(0, num_origins)),
+            qos=qos, deadline_s=deadline, model_pref=pref))
     return reqs
 
 
-def summarize(requests: List[Request]) -> dict:
-    """Mean / p50 / p95 / p99 / max service delay over completed requests."""
-    delays = np.asarray([r.service_s for r in requests if r.done])
+def _delay_stats(delays: np.ndarray) -> Dict[str, float]:
     if delays.size == 0:
-        return {"count": 0, "mean_s": 0.0, "p50_s": 0.0, "p95_s": 0.0,
-                "p99_s": 0.0, "max_s": 0.0}
-    return {"count": int(delays.size),
-            "mean_s": float(delays.mean()),
+        return {"mean_s": 0.0, "p50_s": 0.0, "p95_s": 0.0, "p99_s": 0.0,
+                "max_s": 0.0}
+    return {"mean_s": float(delays.mean()),
             "p50_s": float(np.percentile(delays, 50)),
             "p95_s": float(np.percentile(delays, 95)),
             "p99_s": float(np.percentile(delays, 99)),
             "max_s": float(delays.max())}
+
+
+def _is_missed(r: Request) -> bool:
+    """Deadline verdict, robust to unfinished requests."""
+    if r.deadline_s is None:
+        return False
+    if r.missed is not None:
+        return bool(r.missed)
+    if not r.done:
+        return True          # still unfinished at summary time -> late
+    budget = r.deadline_budget_s
+    return bool(r.service_s > budget)
+
+
+def summarize(requests: Sequence[Request]) -> dict:
+    """Delay percentiles + QoS accounting over a request set.
+
+    Robust to an empty list and to requests that never started (or never
+    finished) service: only requests with a full ``service_s`` enter the
+    delay percentiles; the rest are counted in ``unfinished`` (and count
+    as deadline misses when they carry one).  When any request has a QoS
+    class, a per-class breakdown (p50/p95/p99, deadline-miss rate,
+    priority-weighted goodput share) is attached under ``"classes"``.
+    """
+    def served(r: Request) -> bool:
+        return (r.t_finish is not None
+                and (r.t_arrival is not None or r.t_enqueue is not None))
+
+    reqs = list(requests)
+    done = [r for r in reqs if served(r)]
+    delays = np.asarray([r.service_s for r in done], np.float64)
+
+    out = {"count": int(delays.size),
+           "unfinished": int(len(reqs) - len(done)),
+           **_delay_stats(delays)}
+
+    with_deadline = [r for r in reqs if r.deadline_s is not None]
+    misses = [r for r in with_deadline if _is_missed(r)]
+    out["deadline_miss_rate"] = (len(misses) / len(with_deadline)
+                                 if with_deadline else 0.0)
+    # priority-weighted goodput: what fraction of the offered priority
+    # mass finished within its deadline (no deadline == always on time)
+    w_all = sum(r.priority for r in reqs)
+    w_good = sum(r.priority for r in done if not _is_missed(r))
+    out["weighted_goodput"] = (w_good / w_all) if w_all > 0 else 0.0
+
+    if any(r.qos is not None for r in reqs):
+        classes: Dict[str, dict] = {}
+        for name in sorted({getattr(r.qos, "name", "default")
+                            for r in reqs if r.qos is not None}):
+            sub = [r for r in reqs
+                   if getattr(r.qos, "name", "default") == name]
+            sub_done = [r for r in sub if served(r)]
+            sub_delays = np.asarray([r.service_s for r in sub_done],
+                                    np.float64)
+            sub_dl = [r for r in sub if r.deadline_s is not None]
+            sub_w = sum(r.priority for r in sub)
+            sub_good = sum(r.priority for r in sub_done
+                           if not _is_missed(r))
+            classes[name] = {
+                "count": len(sub),
+                "unfinished": len(sub) - len(sub_done),
+                "priority": float(sub[0].priority),
+                **_delay_stats(sub_delays),
+                "deadline_miss_rate": (
+                    sum(_is_missed(r) for r in sub_dl) / len(sub_dl)
+                    if sub_dl else 0.0),
+                "weighted_goodput": (sub_good / sub_w) if sub_w else 0.0,
+            }
+        out["classes"] = classes
+    return out

@@ -17,7 +17,7 @@ local-only) the paper ablates against.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,9 +29,16 @@ Carry = Any
 
 
 class Scheduler:
-    """Base: stateless-by-default scheduler over ``num_engines`` targets."""
+    """Base: stateless-by-default scheduler over ``num_engines`` targets.
+
+    ``state_dim`` declares the observation width the scheduler was built
+    for (``None`` = shape-agnostic).  ``EdgeCluster`` validates it at
+    construction: the base Eqn-6 row is ``2 + num_engines`` wide, the
+    QoS-extended row ``3 + 2 * num_engines`` (see ``repro.core.env``).
+    """
 
     name = "base"
+    state_dim: Optional[int] = None
 
     def __init__(self, num_engines: int):
         self.num_engines = num_engines
@@ -92,6 +99,40 @@ class LocalOnlyScheduler(Scheduler):
         return int(origin) % self.num_engines, carry
 
 
+class DeadlineAwareScheduler(Scheduler):
+    """Earliest-expected-completion placement on the QoS observation.
+
+    Requires the extended row ``[d, w, q_1..q_E, slack, c_1..c_E]``:
+    picks the engine minimising backlog + this task's own expected
+    compute there (``q_e + c_e``) — JSQ that actually accounts for
+    heterogeneous model/engine speed.  Per-request deadline URGENCY is
+    handled where it belongs, in the engines' priority/EDF queues; this
+    placement rule maximises the chance the slack survives the queue.
+    """
+
+    name = "deadline"
+
+    def __init__(self, num_engines: int):
+        super().__init__(num_engines)
+        self.state_dim = 3 + 2 * num_engines
+
+    def select(self, carry, s, n, key):
+        E = self.num_engines
+        q = s[:, 2:2 + E]
+        aff = s[:, 3 + E:3 + 2 * E]
+        return jnp.argmin(q + aff, axis=-1).astype(jnp.int32), carry
+
+
+def _infer_state_dim(states) -> Optional[int]:
+    """Observation width a stacked agent pytree was trained on (the
+    second-to-last axis of the first critic/Q layer's weights)."""
+    for attr in ("c1", "q"):
+        net = getattr(states, attr, None)
+        if net is not None:
+            return int(net[0]["w"].shape[-2])
+    return None
+
+
 class PolicyScheduler(Scheduler):
     """Trained ``repro.core.agents`` policy behind the Scheduler interface.
 
@@ -113,6 +154,7 @@ class PolicyScheduler(Scheduler):
         self.states = states
         self.n_max = int(n_max)
         self.greedy = greedy
+        self.state_dim = _infer_state_dim(states)
         _, act, _, _, _ = make_agent_fns(method, cfg)
         self._act = act
         self._vact = jax.vmap(act, in_axes=(0, 0, None, 0, None))
@@ -143,7 +185,7 @@ class PolicyScheduler(Scheduler):
         return int(a), carry
 
 
-BASELINES = ("round-robin", "jsq", "random", "local")
+BASELINES = ("round-robin", "jsq", "random", "local", "deadline")
 
 
 def make_scheduler(name: str, num_engines: int, **policy_kwargs) -> Scheduler:
@@ -156,6 +198,8 @@ def make_scheduler(name: str, num_engines: int, **policy_kwargs) -> Scheduler:
         return RandomScheduler(num_engines)
     if name == "local":
         return LocalOnlyScheduler(num_engines)
+    if name == "deadline":
+        return DeadlineAwareScheduler(num_engines)
     if name in LEARNED:
         return PolicyScheduler(name, num_engines=num_engines,
                                **policy_kwargs)

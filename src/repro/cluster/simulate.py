@@ -5,6 +5,12 @@ updates — just the scheduler's ``select`` inside the (T x N x B) scan, with
 queues coupling decisions via Eqn (4).  The same scheduler object (same
 carry pytree) can then be handed to ``repro.cluster.live.EdgeCluster`` and
 placed against real engines.
+
+With a QoS-enabled ``EnvParams`` (``qos_mix`` set) the scan feeds the
+scheduler the extended observation (deadline slack + per-ES affinity) and
+``evaluate_scheduler`` reports the same QoS aggregates the live
+``summarize()`` produces: per-class p50/p95/p99 delay, deadline-miss
+rate, and priority-weighted goodput.
 """
 from __future__ import annotations
 
@@ -31,7 +37,9 @@ def build_sim_episode(scheduler: Scheduler, p: envlib.EnvParams) -> Callable:
             key, k_sel = jax.random.split(key)
             d = ep.d[t, n]
             workload = ep.rho[t, n] * ep.z[t, n]
-            s = envlib.observe(p, qs, d, workload) / scale[None, :]
+            s = envlib.observe(p, qs, d, workload,
+                               slack=ep.deadline[t, n],
+                               f=ep.f) / scale[None, :]
             actions, sc = scheduler.select(sc, s, n, k_sel)
             actions = actions % p.num_bs
             delays = envlib.task_delays(p, ep, qs, t, n, actions)
@@ -53,26 +61,62 @@ def build_sim_episode(scheduler: Scheduler, p: envlib.EnvParams) -> Callable:
     return episode
 
 
+def _percentiles(delays: np.ndarray) -> dict:
+    if delays.size == 0:
+        return {"mean_s": 0.0, "p50_s": 0.0, "p95_s": 0.0, "p99_s": 0.0}
+    return {"mean_s": float(delays.mean()),
+            "p50_s": float(np.percentile(delays, 50)),
+            "p95_s": float(np.percentile(delays, 95)),
+            "p99_s": float(np.percentile(delays, 99))}
+
+
 def evaluate_scheduler(scheduler: Scheduler, p: envlib.EnvParams,
                        episodes: int, key, f: Optional[jnp.ndarray] = None,
                        carry=None) -> dict:
-    """Mean / p95 service delay of ``scheduler`` over fresh episodes."""
+    """Delay percentiles (+ QoS aggregates) over fresh episodes."""
     episode = jax.jit(build_sim_episode(scheduler, p))
     key, k_f = jax.random.split(key)
     if f is None:
         f = envlib.sample_capacities(k_f, p)
     if carry is None:
         carry = scheduler.init_carry()
-    all_delays = []
+    all_delays, all_cls, all_dl, all_prio = [], [], [], []
     for _ in range(episodes):
         key, k_ep, k_run = jax.random.split(key, 3)
         ep_data = envlib.sample_episode(k_ep, p, f=f)
         carry, delays, mask = episode(carry, ep_data, k_run)
-        d = np.asarray(delays)[np.asarray(mask) > 0]
-        all_delays.append(d)
+        sel = np.asarray(mask) > 0
+        all_delays.append(np.asarray(delays)[sel])
+        all_cls.append(np.asarray(ep_data.cls)[sel])
+        all_dl.append(np.asarray(ep_data.deadline)[sel])
+        all_prio.append(np.asarray(ep_data.priority)[sel])
     delays = np.concatenate(all_delays) if all_delays else np.zeros((0,))
-    return {"count": int(delays.size),
-            "mean_s": float(delays.mean()) if delays.size else 0.0,
-            "p95_s": float(np.percentile(delays, 95)) if delays.size
-            else 0.0,
-            "carry": carry}
+    out = {"count": int(delays.size), **_percentiles(delays)}
+    if p.has_qos and delays.size:
+        cls = np.concatenate(all_cls)
+        dl = np.concatenate(all_dl)
+        prio = np.concatenate(all_prio)
+        missed = delays > dl
+        has_dl = np.isfinite(dl)
+        out["deadline_miss_rate"] = (float(missed[has_dl].mean())
+                                     if has_dl.any() else 0.0)
+        out["weighted_goodput"] = float((prio * ~missed).sum()
+                                        / max(prio.sum(), 1e-9))
+        classes = {}
+        for i, (c, _) in enumerate(p.qos_mix):
+            m = cls == i
+            if not m.any():
+                continue
+            c_dl = m & has_dl
+            classes[c.name] = {
+                "count": int(m.sum()),
+                "priority": float(c.priority),
+                **_percentiles(delays[m]),
+                "deadline_miss_rate": (float(missed[c_dl].mean())
+                                       if c_dl.any() else 0.0),
+                "weighted_goodput": float((prio[m] * ~missed[m]).sum()
+                                          / max(prio[m].sum(), 1e-9)),
+            }
+        out["classes"] = classes
+    out["carry"] = carry
+    return out

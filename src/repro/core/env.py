@@ -25,7 +25,8 @@ paper's per-BS parallel / per-task sequential semantics).
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Tuple
+import math
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +34,18 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class EnvParams:
-    """Defaults follow Table III of the paper."""
+    """Defaults follow Table III of the paper.
+
+    ``qos_mix`` (a tuple of ``(QoSClass, weight)`` pairs, see
+    ``repro.workload.qos``) switches on the heterogeneous-QoS extension:
+    each task additionally samples a service class (per-class quality
+    demand z_n, deadline budget, priority weight), the observation grows
+    deadline-slack and per-ES model-affinity features (state layout
+    ``[d, rho*z, q_1..q_B, slack, rho*z/f_1..rho*z/f_B]``), rewards are
+    priority-weighted, and ``deadline_penalty`` optionally adds a miss
+    penalty to Eqn (9).  With an empty mix everything reduces exactly to
+    the paper's setup.
+    """
 
     num_bs: int = 20                 # B
     num_slots: int = 60              # |T|
@@ -57,11 +69,29 @@ class EnvParams:
     # periodic pattern over a certain period": 0.0 = fully iid tasks,
     # 1.0 = task slot n always carries the same (d, z, rho) demand.
     task_periodicity: float = 0.0
+    # QoS extension (repro.workload): () = plain paper env
+    qos_mix: Tuple[Tuple[Any, float], ...] = ()
+    slack_cap: float = 10.0          # seconds; clamps inf deadlines
+    deadline_penalty: float = 0.0    # extra -reward per missed deadline
+
+    @property
+    def has_qos(self) -> bool:
+        return len(self.qos_mix) > 0
+
+    @property
+    def z_hi(self) -> float:
+        """Largest quality demand across base range and QoS classes."""
+        z = self.z_range[1]
+        for c, _ in self.qos_mix:
+            z = max(z, c.z_range[1])
+        return float(z)
 
     @property
     def state_dim(self) -> int:
         # s = [d_n, rho_n * z_n, q_{t-1,1..B}]  (Eqn 6)
-        return 2 + self.num_bs
+        # + [slack, rho_n * z_n / f_1..B] when QoS classes are active
+        base = 2 + self.num_bs
+        return base + (1 + self.num_bs if self.has_qos else 0)
 
     @property
     def action_dim(self) -> int:
@@ -79,6 +109,10 @@ class EpisodeData(NamedTuple):
     v_down: jnp.ndarray   # (T, N, B) Mbit/s
     mask: jnp.ndarray     # (T, N, B) task exists
     f: jnp.ndarray        # (B,) ES capacity Gcycles/s
+    # QoS extension (constants when EnvParams.qos_mix is empty)
+    cls: jnp.ndarray      # (T, N, B) int32 class index (0 without QoS)
+    deadline: jnp.ndarray  # (T, N, B) service budget, inf = best-effort
+    priority: jnp.ndarray  # (T, N, B) priority weight (1 without QoS)
 
 
 def sample_capacities(key, p: EnvParams) -> jnp.ndarray:
@@ -109,15 +143,37 @@ def sample_episode(key, p: EnvParams, f=None) -> EpisodeData:
                                  p.min_tasks, p.max_tasks + 1)
     mask = (jnp.arange(p.max_tasks)[None, :, None]
             < n_tasks[:, None, :]).astype(jnp.float32)
+    if p.has_qos:
+        classes = [c for c, _ in p.qos_mix]
+        w = jnp.asarray([x for _, x in p.qos_mix], jnp.float32)
+        cls = jax.random.categorical(ks[11], jnp.log(w / w.sum()),
+                                     shape=shape)
+        z_lo = jnp.asarray([c.z_range[0] for c in classes], jnp.float32)
+        z_hi = jnp.asarray([c.z_range[1] for c in classes], jnp.float32)
+        z = jnp.round(z_lo[cls] + u(ks[3], 0.0, 1.0)
+                      * (z_hi[cls] - z_lo[cls]))
+        deadline = jnp.asarray(
+            [c.deadline_s if math.isfinite(c.deadline_s) else jnp.inf
+             for c in classes], jnp.float32)[cls]
+        priority = jnp.asarray([c.priority for c in classes],
+                               jnp.float32)[cls]
+    else:
+        cls = jnp.zeros(shape, jnp.int32)
+        z = jnp.round(periodic(ks[9], ks[3], *p.z_range))
+        deadline = jnp.full(shape, jnp.inf, jnp.float32)
+        priority = jnp.ones(shape, jnp.float32)
     return EpisodeData(
         d=periodic(ks[8], ks[1], *p.d_range),
         d_out=u(ks[2], *p.d_out_range),
-        z=jnp.round(periodic(ks[9], ks[3], *p.z_range)),
+        z=z,
         rho=periodic(ks[10], ks[4], *p.rho_range),
         v_up=u(ks[5], *p.v_range),
         v_down=u(ks[6], *p.v_range),
         mask=mask,
         f=f if f is not None else sample_capacities(ks[7], p),
+        cls=cls.astype(jnp.int32),
+        deadline=deadline,
+        priority=priority,
     )
 
 
@@ -131,13 +187,27 @@ def init_queues(p: EnvParams) -> QueueState:
     return QueueState(q_prev=z, q_bef=z)
 
 
-def observe(p: EnvParams, qs: QueueState, d, workload) -> jnp.ndarray:
+def observe(p: EnvParams, qs: QueueState, d, workload,
+            slack=None, f=None) -> jnp.ndarray:
     """Per-task state vector (Eqn 6), vectorised over the B stations.
 
     d, workload: (B,) — the n-th task of each BS.  Returns (B, state_dim).
+
+    With QoS enabled the row is extended by a deadline-slack scalar
+    (remaining budget, clamped at ``slack_cap``) and per-ES affinity
+    features ``workload / f_b'`` — the task's expected compute seconds on
+    each target, which is what makes heterogeneous capacities visible to
+    the policy before queues build up.
     """
     qrep = jnp.broadcast_to(qs.q_prev[None, :], (p.num_bs, p.num_bs))
-    return jnp.concatenate([d[:, None], workload[:, None], qrep], axis=1)
+    cols = [d[:, None], workload[:, None], qrep]
+    if p.has_qos:
+        if slack is None or f is None:
+            raise ValueError("QoS-enabled EnvParams: observe() needs the "
+                             "per-task deadline slack and capacities f")
+        cols.append(jnp.minimum(slack, p.slack_cap)[:, None])
+        cols.append(workload[:, None] / f[None, :])
+    return jnp.concatenate(cols, axis=1)
 
 
 def task_delays(p: EnvParams, ep: EpisodeData, qs: QueueState, t, n,
@@ -175,9 +245,14 @@ def end_slot(p: EnvParams, ep: EpisodeData, qs: QueueState) -> QueueState:
 def state_scale(p: EnvParams) -> jnp.ndarray:
     """Feature normalisation for the networks (keeps inputs O(1))."""
     d_hi = p.d_range[1]
-    w_hi = p.rho_range[1] * p.z_range[1]
-    q_hi = p.rho_range[1] * p.z_range[1] * p.max_tasks  # rough slot load
-    return jnp.concatenate([
+    w_hi = p.rho_range[1] * p.z_hi
+    q_hi = p.rho_range[1] * p.z_hi * p.max_tasks  # rough slot load
+    parts = [
         jnp.array([d_hi, w_hi], jnp.float32),
         jnp.full((p.num_bs,), q_hi, jnp.float32),
-    ])
+    ]
+    if p.has_qos:
+        parts.append(jnp.array([p.slack_cap], jnp.float32))
+        parts.append(jnp.full((p.num_bs,), w_hi / p.f_range[0],
+                              jnp.float32))
+    return jnp.concatenate(parts)

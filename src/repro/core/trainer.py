@@ -150,7 +150,9 @@ def build_episode_fn(method: str, p: envlib.EnvParams,
             d = ep.d[t, n]
             workload = ep.rho[t, n] * ep.z[t, n]
             mask = ep.mask[t, n] > 0
-            s = envlib.observe(p, qs, d, workload) / scale[None, :]
+            s = envlib.observe(p, qs, d, workload,
+                               slack=ep.deadline[t, n],
+                               f=ep.f) / scale[None, :]
 
             if learned:
                 x_next_lat = vlatent(states, n) if method == "lad-ts" else \
@@ -171,7 +173,13 @@ def build_episode_fn(method: str, p: envlib.EnvParams,
 
             actions = actions % p.num_bs
             delays = envlib.task_delays(p, ep, qs, t, n, actions)
-            r = -delays * cfg.reward_scale                    # Eqn (9)
+            # Eqn (9), priority-weighted (priority == 1 without QoS) with
+            # an optional deadline-miss penalty
+            r = -delays * cfg.reward_scale * ep.priority[t, n]
+            if p.deadline_penalty:
+                r -= (cfg.reward_scale * p.deadline_penalty
+                      * ep.priority[t, n]
+                      * (delays > ep.deadline[t, n]))
             qs = envlib.apply_actions(p, ep, qs, t, n, actions)
 
             if learned and train:

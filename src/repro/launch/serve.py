@@ -9,6 +9,13 @@ with a pluggable scheduler placing each request:
 ``--scheduler lad-ts`` first trains the paper policy in the
 ``repro.core.env`` simulator (matching the engine count), then serves
 with it — the closed loop of paper Fig. 10.
+
+``--qos`` switches on the heterogeneous-QoS workload layer
+(``repro.workload``): the trace mixes interactive / standard / batch
+service classes, engines drain in priority/EDF order, learned policies
+train on the extended observation (deadline slack + per-engine
+affinity), ``--scheduler deadline`` becomes available, and the summary
+adds deadline-miss rate and priority-weighted goodput.
 """
 from __future__ import annotations
 
@@ -25,15 +32,21 @@ from repro.core.diffusion import DiffusionPolicyConfig
 from repro.core.env import EnvParams
 from repro.core.trainer import LEARNED, train_method
 from repro.serving.builders import build_engines, warmup
+from repro.workload import DEFAULT_MIX
 
 
-def build_scheduler(name: str, n_edge: int, train_episodes: int, seed: int):
+def build_scheduler(name: str, n_edge: int, train_episodes: int, seed: int,
+                    qos: bool = False):
+    if name == "deadline" and not qos:
+        raise SystemExit("--scheduler deadline needs the QoS-extended "
+                         "observation; pass --qos")
     if name in BASELINES:
         return make_scheduler(name, n_edge)
     if name not in LEARNED:
         raise SystemExit(f"unknown scheduler {name!r}; options: "
                          f"{', '.join(BASELINES + LEARNED)}")
-    p = EnvParams(num_bs=n_edge, num_slots=8, max_tasks=6)
+    p = EnvParams(num_bs=n_edge, num_slots=8, max_tasks=6,
+                  qos_mix=DEFAULT_MIX if qos else ())
     acfg = AgentConfig(train_after=40, replay_capacity=200,
                        diffusion=DiffusionPolicyConfig(num_steps=3))
     print(f"[serve] training {name} in-sim for {train_episodes} episodes "
@@ -49,8 +62,8 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--edges", type=int, default=2)
     ap.add_argument("--scheduler", default="jsq",
-                    help="jsq | round-robin | random | local | lad-ts | "
-                         "d2sac-ts | sac-ts | dqn-ts")
+                    help="jsq | round-robin | random | local | deadline | "
+                         "lad-ts | d2sac-ts | sac-ts | dqn-ts")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--rate", type=float, default=4.0,
                     help="Poisson arrival rate (req/s)")
@@ -58,12 +71,18 @@ def main():
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--kv-slots", type=int, default=4)
     ap.add_argument("--train-episodes", type=int, default=3)
+    ap.add_argument("--qos", action="store_true",
+                    help="mixed interactive/standard/batch QoS trace + "
+                         "extended scheduler observation")
     ap.add_argument("--sample", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    max_tokens = (max(args.tokens,
+                      *(c.z_range[1] for c, _ in DEFAULT_MIX))
+                  if args.qos else args.tokens)
     engines = build_engines(args.arch, args.edges,
-                            args.prompt_len + args.tokens
+                            args.prompt_len + max_tokens
                             + reduced(get_config(args.arch)).vision_patches,
                             kv_slots=args.kv_slots, sample=args.sample)
     cfg0 = engines[0].cfg
@@ -71,13 +90,16 @@ def main():
     warmup(engines, args.prompt_len)       # compile before timed serving
 
     scheduler = build_scheduler(args.scheduler, args.edges,
-                                args.train_episodes, args.seed)
-    cluster = EdgeCluster(engines, scheduler, seed=args.seed)
+                                args.train_episodes, args.seed,
+                                qos=args.qos)
+    cluster = EdgeCluster(engines, scheduler, seed=args.seed,
+                          qos_obs=args.qos)
     trace = poisson_trace(args.requests, rate=args.rate,
                           prompt_len=args.prompt_len,
                           max_new_tokens=args.tokens, vocab_size=vocab,
                           num_origins=args.edges, seed=args.seed,
-                          num_codebooks=cfg0.num_codebooks)
+                          num_codebooks=cfg0.num_codebooks,
+                          qos_mix=DEFAULT_MIX if args.qos else None)
     if cfg0.vision_patches:
         for r in trace:
             r.patches = jax.random.normal(
@@ -93,9 +115,18 @@ def main():
               f"decode={r.decode_s*1e3:.1f}ms "
               f"service={r.service_s*1e3:.1f}ms {tps}")
     st = summarize(done)
-    print(f"[serve] {scheduler.name}: n={st['count']} "
-          f"mean={st['mean_s']*1e3:.1f}ms p95={st['p95_s']*1e3:.1f}ms "
-          f"max={st['max_s']*1e3:.1f}ms")
+    line = (f"[serve] {scheduler.name}: n={st['count']} "
+            f"mean={st['mean_s']*1e3:.1f}ms p95={st['p95_s']*1e3:.1f}ms "
+            f"max={st['max_s']*1e3:.1f}ms")
+    if args.qos:
+        line += (f" miss={st['deadline_miss_rate']:.2f}"
+                 f" goodput={st['weighted_goodput']:.2f}")
+        for name, cs in st.get("classes", {}).items():
+            print(f"[serve]   class {name}: n={cs['count']} "
+                  f"p50={cs['p50_s']*1e3:.1f}ms "
+                  f"p95={cs['p95_s']*1e3:.1f}ms "
+                  f"miss={cs['deadline_miss_rate']:.2f}")
+    print(line)
 
 
 if __name__ == "__main__":

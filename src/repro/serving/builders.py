@@ -39,7 +39,38 @@ def build_engines(arch: str, n_edge: int, max_len: int, *,
                                    kv_slots=kv_slots, sample=sample,
                                    paged=paged, page_size=page_size,
                                    max_lanes=max_lanes,
-                                   prefill_chunk=prefill_chunk))
+                                   prefill_chunk=prefill_chunk,
+                                   arch_id=arch))
+    return engines
+
+
+def build_fleet(archs: Sequence[str], max_len: int, *,
+                kv_slots: int = 4, sample: bool = False,
+                depths: Optional[Sequence[int]] = None,
+                seed0: int = 0, paged: Optional[bool] = None,
+                page_size: int = 16, max_lanes: Optional[int] = None,
+                prefill_chunk: int = 64) -> List[ServeEngine]:
+    """Heterogeneous fleet: one engine PER ENTRY of ``archs``.
+
+    Unlike :func:`build_engines` (n replicas of one arch), each engine
+    here hosts a different reduced model-zoo config — mixed arch
+    families mean mixed KV backends (paged attention pools next to
+    dense xLSTM/RG slot pools) behind the same cluster interface.  The
+    engine's ``arch_id`` tags it for request ``model_pref`` affinity."""
+    archs = list(archs)
+    depths = (list(depths) if depths is not None
+              else default_depths(len(archs)))
+    engines = []
+    for i, arch in enumerate(archs):
+        cfg = dataclasses.replace(reduced(get_config(arch)),
+                                  num_layers=depths[i])
+        params = init_params(jax.random.key(seed0 + i), cfg)
+        engines.append(ServeEngine(cfg, params, max_len=max_len,
+                                   kv_slots=kv_slots, sample=sample,
+                                   paged=paged, page_size=page_size,
+                                   max_lanes=max_lanes,
+                                   prefill_chunk=prefill_chunk,
+                                   arch_id=arch))
     return engines
 
 

@@ -35,7 +35,6 @@ engine serves a request; the engine reports its backlog via
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 import time
 from typing import Callable, List, Optional
@@ -48,6 +47,8 @@ from repro.cluster.request import Request
 from repro.serving.paged_kv import BlockTable, PagePool, cdiv, paged_supported
 from repro.train.steps import (make_decode_step, make_paged_decode_step,
                                make_paged_prefill_step, make_prefill_step)
+from repro.workload.capability import EngineCapability, cold_token_seconds
+from repro.workload.queueing import EDFQueue
 
 
 @dataclasses.dataclass
@@ -96,14 +97,17 @@ class ServeEngine:
                  paged: Optional[bool] = None, page_size: int = 16,
                  num_pages: Optional[int] = None,
                  max_lanes: Optional[int] = None,
-                 prefill_chunk: int = 64):
+                 prefill_chunk: int = 64,
+                 arch_id: Optional[str] = None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.kv_slots = kv_slots
         self.sample = sample
+        self.arch_id = arch_id or cfg.name
         self._clock = clock
-        self._queue: collections.deque = collections.deque()
+        # priority/EDF ordering; exact FIFO for requests without QoS
+        self._queue = EDFQueue()
         self._zero_tok = np.zeros(
             (1, cfg.num_codebooks) if cfg.num_codebooks else (1,), np.int32)
         self._rng = jax.random.key(0)
@@ -172,7 +176,7 @@ class ServeEngine:
             req.t_prefill_end = self._clock()
             req.tokens.append(tok)
             if len(req.tokens) >= req.max_new_tokens:
-                req.t_finish = req.t_prefill_end
+                req.finish(req.t_prefill_end)
                 finished.append(req)
                 free.insert(0, i)
                 continue
@@ -201,7 +205,7 @@ class ServeEngine:
                 req.tokens.append(tk)
                 self._last_tok[i] = tk
                 if len(req.tokens) >= req.max_new_tokens:
-                    req.t_finish = now
+                    req.finish(now)
                     finished.append(req)
                     self._slots[i] = None
         return finished
@@ -212,8 +216,9 @@ class ServeEngine:
     def _step_paged(self) -> List[Request]:
         finished = []
         # 1. admission — head-of-line, gated on free pages (worst case
-        # reserved up front) and a free lane.  No queue skipping: FCFS
-        # order is what the cluster schedulers assume.
+        # reserved up front) and a free lane.  The queue drains in
+        # priority/EDF order (exact FIFO without QoS classes); no
+        # skipping past the ordered head.
         free = [i for i, ln in enumerate(self._lanes) if ln is None]
         while free and self._queue:
             req = self._queue[0]
@@ -263,7 +268,7 @@ class ServeEngine:
                 req.tokens.append(tok)
                 lane.last_tok = tok
                 if len(req.tokens) >= req.max_new_tokens:
-                    req.t_finish = req.t_prefill_end
+                    req.finish(req.t_prefill_end)
                     finished.append(req)
                     self._free_lane(i)
 
@@ -303,7 +308,7 @@ class ServeEngine:
                 lane.last_tok = tk
                 lane.length += 1                   # decode wrote one KV
                 if len(req.tokens) >= req.max_new_tokens:
-                    req.t_finish = now
+                    req.finish(now)
                     finished.append(req)
                     self._free_lane(i)
         return finished
@@ -359,6 +364,30 @@ class ServeEngine:
     def pending_seconds(self) -> float:
         """Measured backlog estimate: pending tokens x EWMA token time."""
         return self.pending_tokens * self._ewma_tok_s
+
+    @property
+    def est_token_seconds(self) -> float:
+        """Seconds per decode token: measured EWMA once the engine has run
+        a round, else a FLOPs-based cold prior (the paper's rho_n / f_b)."""
+        if self._ewma_tok_s > 0:
+            return self._ewma_tok_s
+        return cold_token_seconds(self.cfg)
+
+    @property
+    def capability(self) -> EngineCapability:
+        """Snapshot of this engine as an edge-server capability descriptor:
+        its live f_b' (measured tok/s) and per-step cost rho_n."""
+        active = self.cfg.active_param_count()
+        return EngineCapability(
+            arch=self.arch_id,
+            model_name=self.cfg.name,
+            num_layers=self.cfg.num_layers,
+            d_model=self.cfg.d_model,
+            active_params=active,
+            rho_gcycles=2.0 * active / 1e9,
+            tok_s=1.0 / self.est_token_seconds,
+            measured=self._ewma_tok_s > 0,
+            paged=self.paged)
 
     # ------------------------------------------------------------------
     # blocking compatibility API

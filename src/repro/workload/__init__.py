@@ -1,0 +1,31 @@
+"""Heterogeneous model zoo + QoS-class workload layer.
+
+  * ``qos``        — QoS classes (priority weight, deadline budget,
+                     quality-demand z_n range, model preference) and the
+                     default interactive / standard / batch mix.
+  * ``trace``      — mixed-class Poisson trace generation on top of
+                     ``repro.cluster.request``.
+  * ``queueing``   — priority/EDF engine queues (FIFO-compatible for
+                     QoS-free workloads).
+  * ``capability`` — per-engine capability descriptors: measured tok/s
+                     as the live f_b', per-token Gcycles as rho_n.
+
+The classes here are shared verbatim by the ``core.env`` simulator
+(``EnvParams.qos_mix``) and live traces (``poisson_trace(qos_mix=...)``),
+which is what keeps the extended Eqn-6 observation aligned across both
+backends.
+"""
+from repro.workload.capability import (COLD_FLOPS, EngineCapability,
+                                       cold_token_seconds)
+from repro.workload.qos import (BEST_EFFORT, DEFAULT_MIX, INTERACTIVE,
+                                STANDARD, QoSClass, QoSMix,
+                                normalized_weights, priority_of, scaled)
+from repro.workload.queueing import EDFQueue
+from repro.workload.trace import qos_poisson_trace
+
+__all__ = [
+    "BEST_EFFORT", "COLD_FLOPS", "DEFAULT_MIX", "EDFQueue",
+    "EngineCapability", "INTERACTIVE", "QoSClass", "QoSMix", "STANDARD",
+    "cold_token_seconds", "normalized_weights", "priority_of",
+    "qos_poisson_trace", "scaled",
+]

@@ -1,0 +1,28 @@
+"""Heterogeneous trace generation: a QoS mix over the Poisson process.
+
+Thin front-end over :func:`repro.cluster.request.poisson_trace` — the
+mixing itself lives there (``qos_mix=``) so the cluster layer has no
+dependency on this package.  This module picks sane derived defaults:
+the trace-level ``max_new_tokens`` bound is the largest class z_n, and
+per-class prompt lengths pass through the classes unchanged.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+from repro.cluster.request import Request, poisson_trace
+from repro.workload.qos import DEFAULT_MIX, QoSClass
+
+
+def qos_poisson_trace(num_requests: int, rate: float, prompt_len: int,
+                      vocab_size: int, *,
+                      mix: Sequence[Tuple[QoSClass, float]] = DEFAULT_MIX,
+                      num_origins: int = 1, num_codebooks: int = 0,
+                      seed: int = 0) -> List[Request]:
+    """Poisson arrivals with per-request class, deadline and demand."""
+    z_hi = max(c.z_range[1] for c, _ in mix)
+    return poisson_trace(num_requests, rate, prompt_len,
+                         max_new_tokens=z_hi, vocab_size=vocab_size,
+                         num_origins=num_origins,
+                         num_codebooks=num_codebooks, seed=seed,
+                         qos_mix=tuple(mix))

@@ -221,3 +221,37 @@ def test_engine_reset_clears_rate_and_rid_state():
     # engine still serves correctly after reset
     res = eng.generate(prompt, 2)
     assert len(res.tokens) == 2
+
+
+def test_mixed_paged_dense_fleet_parity():
+    """A heterogeneous cluster mixes KV backends: the attention engine
+    auto-selects the page pool, the xLSTM engine keeps the dense slot
+    pool, and each model's greedy tokens in the shared fleet match a
+    solo run of the same engine (the backends don't interfere)."""
+    from repro.cluster import EdgeCluster, make_scheduler
+    from repro.serving.builders import build_fleet
+
+    fleet = build_fleet(("qwen2-1.5b", "xlstm-350m"), max_len=48,
+                        kv_slots=2, depths=[2, 2])
+    assert fleet[0].paged and not fleet[1].paged
+    vocab = min(e.cfg.vocab_size for e in fleet)
+    prompts = jax.random.randint(jax.random.key(6), (2, 8), 0, vocab)
+
+    # solo references, one per backend
+    solo = []
+    for e, p in zip(fleet, prompts):
+        r = Request(rid=0, prompt=p[None], max_new_tokens=4)
+        e.admit(r)
+        e.run_to_completion()
+        solo.append(np.stack(r.tokens))
+        e.reset()
+
+    # same prompts through the mixed fleet, pinned by a local scheduler
+    cluster = EdgeCluster(fleet, make_scheduler("local", 2))
+    reqs = [Request(rid=i, prompt=prompts[i][None], max_new_tokens=4,
+                    origin=i, arrival_s=0.0) for i in range(2)]
+    done = cluster.run(reqs)
+    assert len(done) == 2
+    for i, r in enumerate(sorted(done, key=lambda r: r.rid)):
+        assert r.engine_id == i
+        np.testing.assert_array_equal(np.stack(r.tokens), solo[i])
