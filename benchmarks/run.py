@@ -24,6 +24,10 @@ Mapping to the paper:
               live fleet (paged + dense engines) under LAD-TS vs baselines
               incl. deadline-aware (per-class p50/p95/p99, miss rate,
               priority-weighted goodput)
+  chaos    -> (systems) the same trace under fault injection: one hard
+              mid-trace crash + recovery per scheduler (completion rate,
+              retries, orphan-recovery latency, goodput, KV-leak check)
+              plus the fault-enabled simulator's wrong-choice rates
   kernels  -> (systems) Pallas kernel microbenches
   roofline -> (systems) dry-run roofline terms per (arch x shape x mesh)
 """
@@ -41,7 +45,7 @@ def main() -> None:
     ap.add_argument("--scale", choices=["quick", "paper"], default="quick")
     ap.add_argument("--only", default=None,
                     help="comma list: fig5,fig6a,fig6b,fig7a,fig7b,fig8,"
-                         "tablev,closedloop,kernels,roofline")
+                         "tablev,closedloop,chaos,kernels,roofline")
     ap.add_argument("--out-dir", default=None,
                     help="write BENCH_<name>.json result files here")
     args = ap.parse_args()
@@ -100,6 +104,11 @@ def main() -> None:
         r, recs = bench_closed_loop(args.scale)
         rows += r
         emit("closedloop", recs)
+    if want("chaos"):
+        from benchmarks.serving import bench_chaos
+        r, recs = bench_chaos(args.scale)
+        rows += r
+        emit("chaos", recs)
     if want("kernels"):
         from benchmarks.kernels import bench_kernels
         r, recs = bench_kernels()

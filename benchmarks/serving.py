@@ -15,6 +15,13 @@
                          records), plus the same schedulers evaluated in
                          the ``core.env`` simulator on the identical
                          extended Eqn-6 observation.
+``bench_chaos``        — goodput under failures: the same mixed-QoS trace
+                         replayed per scheduler while a deterministic
+                         fault schedule crashes one engine mid-trace and
+                         recovers it; reports completion rate, retries,
+                         orphan-recovery latency, priority-weighted
+                         goodput and the KV-accounting invariant, plus
+                         the fault-enabled simulator's wrong-choice rate.
 """
 from __future__ import annotations
 
@@ -22,6 +29,7 @@ import time
 from typing import List
 
 import jax
+import numpy as np
 
 from repro.cluster import (EdgeCluster, PolicyScheduler, evaluate_scheduler,
                            make_scheduler, poisson_trace, summarize)
@@ -30,6 +38,7 @@ from repro.core.agents import AgentConfig
 from repro.core.diffusion import DiffusionPolicyConfig
 from repro.core.env import EnvParams
 from repro.core.trainer import train_method
+from repro.faults import FaultParams, RetryPolicy, single_crash
 from repro.serving.builders import build_engines, build_fleet, warmup
 from repro.workload import BEST_EFFORT, INTERACTIVE, STANDARD, scaled
 
@@ -86,15 +95,23 @@ def bench_tablev(num_requests=(1, 8, 32), prompt_len: int = 16,
     return rows
 
 
-def bench_qos_mix(gen_tokens: int):
+def bench_qos_mix(gen_tokens: int, prompt_len: int = 0):
     """QoS mix rescaled to the benchmark's token scale: interactive
-    requests are short and prefer the smallest model, batch requests run
-    up to 3x the nominal generation length with no deadline."""
+    requests are short (half-length prompts) and prefer the smallest
+    model, batch requests carry double-length prompts and run up to 3x
+    the nominal generation length with no deadline.  ``prompt_len=0``
+    keeps the trace-level prompt length for every class."""
+    plens = {c: None for c in ("interactive", "standard", "batch")}
+    if prompt_len:
+        plens = {"interactive": max(prompt_len // 2, 1),
+                 "standard": None,          # trace-level default
+                 "batch": 2 * prompt_len}
     return ((scaled(INTERACTIVE, z_range=(1, gen_tokens),
+                    prompt_len=plens["interactive"],
                     model_pref="xlstm-350m"), 0.4),
             (scaled(STANDARD,
                     z_range=(max(gen_tokens // 2, 1), 2 * gen_tokens)), 0.4),
-            (scaled(BEST_EFFORT,
+            (scaled(BEST_EFFORT, prompt_len=plens["batch"],
                     z_range=(gen_tokens, 3 * gen_tokens)), 0.2))
 
 
@@ -117,7 +134,11 @@ def bench_closed_loop(scale: str = "quick", n_edge: int = 4,
 
     Returns (csv_rows, json_records)."""
     paper = scale == "paper"
-    mix = bench_qos_mix(gen_tokens)
+    # per-class prompt lengths: interactive half-length, batch double —
+    # the live fleet sees a mixed prompt-length distribution (the sim's
+    # d_n spread already models it); max_len=3*(prompt+gen) below covers
+    # the worst case 2*prompt_len + 3*gen_tokens
+    mix = bench_qos_mix(gen_tokens, prompt_len=prompt_len)
     p = EnvParams(num_bs=n_edge, num_slots=30 if paper else 8,
                   max_tasks=12 if paper else 6, qos_mix=mix)
     acfg = AgentConfig(train_after=120 if paper else 40,
@@ -204,4 +225,111 @@ def bench_closed_loop(scale: str = "quick", n_edge: int = 4,
             "prompt_len": prompt_len,
             "peak_inflight": peak,
             **stats})
+    return rows, records
+
+
+def bench_chaos(scale: str = "quick", n_edge: int = 2,
+                num_requests: int = 16, rate: float = 48.0,
+                prompt_len: int = 16, gen_tokens: int = 6,
+                seed: int = 0, kv_slots: int = 2, prefill_chunk: int = 8,
+                fault_seed: int = 0):
+    """Chaos run: one hard mid-trace crash + recovery, per scheduler.
+
+    A calibration pass (JSQ, fault-free) measures the trace makespan;
+    the chaos passes then crash one engine at 0.3x that makespan and
+    recover it 0.35x later, so every scheduler faces the IDENTICAL
+    deterministic fault schedule (same ``fault_seed`` -> same schedule).
+    Acceptance: every non-abandoned request completes (completion_rate
+    == 1.0), retries stay within the policy cap, and each engine's KV
+    accounting returns to zero — the crash-recovery invariants CI
+    asserts on the emitted ``BENCH_chaos.json``.
+
+    Returns (csv_rows, json_records)."""
+    paper = scale == "paper"
+    if paper:
+        num_requests, rate = 4 * num_requests, 2 * rate
+    mix = bench_qos_mix(gen_tokens, prompt_len=prompt_len)
+    E = n_edge
+    archs = [FLEET_ARCHS[i % len(FLEET_ARCHS)] for i in range(E)]
+    max_len = 3 * (prompt_len + gen_tokens)
+    engines = build_fleet(archs, max_len,
+                          depths=[2 + (i % 2) for i in range(E)],
+                          seed0=1, kv_slots=kv_slots,
+                          prefill_chunk=prefill_chunk,
+                          max_lanes=4 * kv_slots)
+    vocab = min(e.cfg.vocab_size for e in engines)
+    warmup(engines, prompt_len)
+
+    def trace():
+        return poisson_trace(num_requests, rate=rate,
+                             prompt_len=prompt_len,
+                             max_new_tokens=gen_tokens, vocab_size=vocab,
+                             num_origins=E, seed=seed + 1, qos_mix=mix)
+
+    # --- calibration: fault-free makespan anchors the fault schedule ----
+    for e in engines:
+        e.reset()
+    t0 = time.monotonic()
+    EdgeCluster(engines, make_scheduler("jsq", E), seed=seed).run(trace())
+    makespan = time.monotonic() - t0
+    crash_t = 0.3 * makespan
+    downtime = 0.35 * makespan
+    rng = np.random.default_rng(fault_seed)
+    victim = int(rng.integers(E))
+
+    rows, records = [], []
+    scheds = {
+        "failure-aware": make_scheduler("failure-aware", E, qos=True),
+        "deadline": make_scheduler("deadline", E),
+        "jsq": make_scheduler("jsq", E),
+        "round-robin": make_scheduler("round-robin", E),
+    }
+    for name, s in scheds.items():
+        for e in engines:
+            e.reset()
+        inj = single_crash(engine=victim, t_s=crash_t,
+                           downtime_s=downtime, num_engines=E)
+        cluster = EdgeCluster(engines, s, seed=seed, faults=inj,
+                              retry=RetryPolicy())
+        t0 = time.monotonic()
+        stats = summarize(cluster.run(trace()))
+        wall = time.monotonic() - t0
+        fs = cluster.fault_stats
+        rec_s = fs["orphan_recovery_s"]
+        leak = [int(e.kv_leak) for e in engines]
+        rows.append(
+            f"chaos_live/{name},{wall/max(num_requests,1)*1e6:.0f},"
+            f"cr={stats['completion_rate']:.3f};"
+            f"completed={stats['completed']};failed={stats['failed']};"
+            f"abandoned={stats['abandoned']};retries={stats['retries']};"
+            f"orphans={fs['orphaned']};"
+            f"goodput={stats.get('weighted_goodput', 0.0):.2f};"
+            f"kv_leak={sum(leak)}")
+        records.append({
+            "bench": "chaos_live", "scheduler": name, "wall_s": wall,
+            "makespan_calib_s": makespan,
+            "goodput_rps": stats["completed"] / max(wall, 1e-9),
+            "fault_schedule": inj.describe(), "fault_seed": fault_seed,
+            "orphan_recovery_mean_s": (float(np.mean(rec_s))
+                                       if rec_s else 0.0),
+            "kv_leak": leak,
+            **{k: v for k, v in fs.items() if k != "orphan_recovery_s"},
+            **stats})
+
+    # --- fault-enabled simulator twin: wrong-choice rate ----------------
+    p = EnvParams(num_bs=E, num_slots=16 if paper else 8,
+                  max_tasks=8 if paper else 5,
+                  fault=FaultParams(p_down=0.15, p_up=0.5))
+    for name in ("failure-aware", "jsq", "round-robin"):
+        s = make_scheduler(name, E)
+        t0 = time.monotonic()
+        r = evaluate_scheduler(s, p, episodes=2, key=jax.random.key(seed))
+        r.pop("carry", None)
+        wall = time.monotonic() - t0
+        rows.append(f"chaos_sim/{name},{wall/max(r['count'],1)*1e6:.0f},"
+                    f"mean={r['mean_s']:.3f}s;"
+                    f"wrong={r['wrong_choice_rate']:.3f}")
+        records.append({"bench": "chaos_sim", "scheduler": name,
+                        "wall_s": wall, "p_down": p.fault.p_down,
+                        "p_up": p.fault.p_up, **r})
     return rows, records

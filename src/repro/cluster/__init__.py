@@ -12,6 +12,7 @@
 from repro.cluster.live import EdgeCluster, LiveObsConfig
 from repro.cluster.request import Request, poisson_trace, summarize
 from repro.cluster.schedulers import (BASELINES, DeadlineAwareScheduler,
+                                      FailureAwareScheduler,
                                       JoinShortestQueueScheduler,
                                       LocalOnlyScheduler, PolicyScheduler,
                                       RandomScheduler, RoundRobinScheduler,
@@ -20,8 +21,8 @@ from repro.cluster.simulate import build_sim_episode, evaluate_scheduler
 
 __all__ = [
     "BASELINES", "DeadlineAwareScheduler", "EdgeCluster",
-    "JoinShortestQueueScheduler", "LiveObsConfig", "LocalOnlyScheduler",
-    "PolicyScheduler", "RandomScheduler", "Request", "RoundRobinScheduler",
-    "Scheduler", "build_sim_episode", "evaluate_scheduler",
-    "make_scheduler", "poisson_trace", "summarize",
+    "FailureAwareScheduler", "JoinShortestQueueScheduler", "LiveObsConfig",
+    "LocalOnlyScheduler", "PolicyScheduler", "RandomScheduler", "Request",
+    "RoundRobinScheduler", "Scheduler", "build_sim_episode",
+    "evaluate_scheduler", "make_scheduler", "poisson_trace", "summarize",
 ]

@@ -45,6 +45,12 @@ class Request:                     # would compare prompt arrays
     model_pref: Optional[str] = None  # preferred arch id
     missed: Optional[bool] = None     # stamped by finish()
 
+    # fault tolerance (repro.faults) ---------------------------------------
+    attempts: int = 0                 # placements so far (1 = first try)
+    status: str = "pending"           # pending | ok | failed | abandoned
+    t_orphaned: Optional[float] = None  # stamped when a crash orphans it
+    fail_reason: Optional[str] = None   # last failure/abandon cause
+
     # lifecycle (engine clock, absolute seconds) ---------------------------
     t_arrival: Optional[float] = None       # stamped by the cluster driver
     t_enqueue: Optional[float] = None       # admitted to an engine queue
@@ -95,12 +101,45 @@ class Request:                     # would compare prompt arrays
             return None
         return self.deadline_s - self.arrival_s
 
+    @property
+    def terminal(self) -> bool:
+        """Request reached a final state (ok / failed / abandoned)."""
+        return self.status in ("ok", "failed", "abandoned")
+
     def finish(self, t: float) -> None:
         """Stamp completion and resolve the deadline verdict."""
         self.t_finish = t
+        self.status = "ok"
         budget = self.deadline_budget_s
         if budget is not None:
             self.missed = bool(self.service_s > budget)
+
+    # -- fault-tolerance helpers ---------------------------------------
+    def reset_for_retry(self) -> None:
+        """Clear per-attempt state before a re-placement.
+
+        Tokens and the engine-side timestamps belong to the failed
+        attempt — a retried request must regenerate from scratch (no
+        duplicated completions, no torn token streams).  ``t_arrival``
+        survives so end-to-end delay and the watchdog keep counting from
+        the ORIGINAL arrival across attempts.
+        """
+        self.tokens = []
+        self.t_enqueue = None
+        self.t_prefill_start = None
+        self.t_prefill_end = None
+        self.t_finish = None
+        self.engine_id = None
+        self.missed = None
+
+    def give_up(self, status: str, reason: str) -> None:
+        """Terminal failure: ``failed`` (retries exhausted) or
+        ``abandoned`` (watchdog).  Leaves ``t_finish`` unset so the
+        request never enters delay percentiles."""
+        if status not in ("failed", "abandoned"):
+            raise ValueError(f"not a terminal failure status: {status!r}")
+        self.status = status
+        self.fail_reason = reason
 
 
 def poisson_trace(num_requests: int, rate: float, prompt_len: int,
@@ -192,15 +231,38 @@ def _is_missed(r: Request) -> bool:
     return bool(r.service_s > budget)
 
 
+def _status_stats(reqs: Sequence[Request]) -> Dict[str, float]:
+    """Terminal-status breakdown: goodput under faults, made visible.
+
+    ``completion_rate`` is completed / non-abandoned — the chaos
+    acceptance metric: watchdog-shed requests are deliberate load
+    shedding, anything else must finish.  Abandoned and failed requests
+    never carry a ``t_finish``, so they can never leak into the delay
+    percentiles.
+    """
+    completed = sum(r.status == "ok" for r in reqs)
+    failed = sum(r.status == "failed" for r in reqs)
+    abandoned = sum(r.status == "abandoned" for r in reqs)
+    non_abandoned = len(reqs) - abandoned
+    return {"completed": completed, "failed": failed,
+            "abandoned": abandoned,
+            "retries": int(sum(max(r.attempts - 1, 0) for r in reqs)),
+            "retried": sum(r.attempts > 1 for r in reqs),
+            "completion_rate": (completed / non_abandoned
+                                if non_abandoned else 1.0)}
+
+
 def summarize(requests: Sequence[Request]) -> dict:
-    """Delay percentiles + QoS accounting over a request set.
+    """Delay percentiles + QoS + terminal-status accounting.
 
     Robust to an empty list and to requests that never started (or never
     finished) service: only requests with a full ``service_s`` enter the
     delay percentiles; the rest are counted in ``unfinished`` (and count
-    as deadline misses when they carry one).  When any request has a QoS
-    class, a per-class breakdown (p50/p95/p99, deadline-miss rate,
-    priority-weighted goodput share) is attached under ``"classes"``.
+    as deadline misses when they carry one).  An ABANDONED request's
+    delay is never counted into p50/p95/p99 — shedding is not serving.
+    When any request has a QoS class, a per-class breakdown
+    (p50/p95/p99, deadline-miss rate, priority-weighted goodput share,
+    status counts) is attached under ``"classes"``.
     """
     def served(r: Request) -> bool:
         return (r.t_finish is not None
@@ -212,6 +274,7 @@ def summarize(requests: Sequence[Request]) -> dict:
 
     out = {"count": int(delays.size),
            "unfinished": int(len(reqs) - len(done)),
+           **_status_stats(reqs),
            **_delay_stats(delays)}
 
     with_deadline = [r for r in reqs if r.deadline_s is not None]
@@ -241,6 +304,7 @@ def summarize(requests: Sequence[Request]) -> dict:
                 "count": len(sub),
                 "unfinished": len(sub) - len(sub_done),
                 "priority": float(sub[0].priority),
+                **_status_stats(sub),
                 **_delay_stats(sub_delays),
                 "deadline_miss_rate": (
                     sum(_is_missed(r) for r in sub_dl) / len(sub_dl)

@@ -21,6 +21,7 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import agents as ag
 from repro.core.trainer import LEARNED, make_agent_fns
@@ -57,6 +58,24 @@ class Scheduler:
                    n: int, key) -> Tuple[int, Carry]:
         a, carry = self.select(carry, s_row[None, :], n, key)
         return int(a[0]), carry
+
+    def select_one_masked(self, carry: Carry, s_row: jnp.ndarray,
+                          origin: int, n: int, key,
+                          avail) -> Tuple[int, Carry]:
+        """Availability-masked selection for the live cluster.
+
+        Default policy: take the scheduler's unmasked pick; if it landed
+        on a DOWN engine, redirect to the least-loaded available one
+        (reading the queue features at obs columns ``2:2+E``) — the live
+        twin of the simulator's ``repro.faults.mask_actions``.  The
+        caller guarantees at least one engine is available.
+        """
+        eng, carry = self.select_one(carry, s_row, origin, n, key)
+        avail = np.asarray(avail, bool)
+        if avail[eng]:
+            return eng, carry
+        q = np.asarray(s_row, np.float32)[2:2 + self.num_engines]
+        return int(np.argmin(np.where(avail, q, np.inf))), carry
 
 
 class RoundRobinScheduler(Scheduler):
@@ -123,6 +142,42 @@ class DeadlineAwareScheduler(Scheduler):
         return jnp.argmin(q + aff, axis=-1).astype(jnp.int32), carry
 
 
+class FailureAwareScheduler(Scheduler):
+    """Availability-masked least-work placement on a fault-extended row.
+
+    Requires fault observation: the row's trailing ``E`` columns are the
+    per-engine availability features (1 healthy / 0.5 degraded / 0 down)
+    appended by ``EdgeCluster.observe`` and by the fault-enabled
+    ``core.env`` scan.  Placement is JSQ over the AVAILABLE engines —
+    plus this task's expected compute there when the QoS affinity
+    columns are present — and DOWN engines are hard-masked, so it never
+    pays the simulator's wrong-choice penalty and never strands a live
+    request on a dead server.  DEGRADED engines stay eligible but their
+    0.5 availability halves their attractiveness via a load inflation.
+    """
+
+    name = "failure-aware"
+
+    def __init__(self, num_engines: int, qos: bool = False):
+        super().__init__(num_engines)
+        self.qos = bool(qos)
+        base = 3 + 2 * num_engines if qos else 2 + num_engines
+        self.state_dim = base + num_engines
+
+    def select(self, carry, s, n, key):
+        E = self.num_engines
+        cost = s[:, 2:2 + E]
+        if self.qos:
+            cost = cost + s[:, 3 + E:3 + 2 * E]
+        avail = s[:, -E:]
+        # degraded (0.5) engines serve at reduced rate: scale their cost
+        cost = cost / jnp.maximum(avail, 0.5)
+        cost = jnp.where(avail > 0.25, cost, jnp.inf)
+        # all-down column of inf -> argmin returns 0; the live cluster
+        # never reaches that case (submit refuses on a total outage)
+        return jnp.argmin(cost, axis=-1).astype(jnp.int32), carry
+
+
 def _infer_state_dim(states) -> Optional[int]:
     """Observation width a stacked agent pytree was trained on (the
     second-to-last axis of the first critic/Q layer's weights)."""
@@ -185,11 +240,15 @@ class PolicyScheduler(Scheduler):
         return int(a), carry
 
 
-BASELINES = ("round-robin", "jsq", "random", "local", "deadline")
+BASELINES = ("round-robin", "jsq", "random", "local", "deadline",
+             "failure-aware")
 
 
 def make_scheduler(name: str, num_engines: int, **policy_kwargs) -> Scheduler:
-    """Factory: baseline by name, or a learned method given agent states."""
+    """Factory: baseline by name, or a learned method given agent states.
+
+    ``failure-aware`` accepts ``qos=True`` to read the QoS-extended row.
+    """
     if name == "round-robin":
         return RoundRobinScheduler(num_engines)
     if name == "jsq":
@@ -200,6 +259,9 @@ def make_scheduler(name: str, num_engines: int, **policy_kwargs) -> Scheduler:
         return LocalOnlyScheduler(num_engines)
     if name == "deadline":
         return DeadlineAwareScheduler(num_engines)
+    if name == "failure-aware":
+        return FailureAwareScheduler(num_engines,
+                                     qos=policy_kwargs.pop("qos", False))
     if name in LEARNED:
         return PolicyScheduler(name, num_engines=num_engines,
                                **policy_kwargs)

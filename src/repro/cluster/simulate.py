@@ -11,6 +11,13 @@ scheduler the extended observation (deadline slack + per-ES affinity) and
 ``evaluate_scheduler`` reports the same QoS aggregates the live
 ``summarize()`` produces: per-class p50/p95/p99 delay, deadline-miss
 rate, and priority-weighted goodput.
+
+With a fault-enabled ``EnvParams`` (``fault`` set) every ES runs its
+Bernoulli up/down chain inside the scan: the observation grows per-ES
+availability columns, actions landing on a DOWN server are remapped to
+the least-loaded available one with ``penalty_s`` added to that task's
+delay, DOWN servers stop draining, and ``evaluate_scheduler`` reports
+the ``wrong_choice_rate`` alongside the delay aggregates.
 """
 from __future__ import annotations
 
@@ -25,37 +32,59 @@ from repro.core import env as envlib
 
 
 def build_sim_episode(scheduler: Scheduler, p: envlib.EnvParams) -> Callable:
-    """episode(carry, ep_data, key) -> (carry, delays (T,N,B), mask)."""
+    """episode(carry, ep_data, key) -> (carry, delays (T,N,B), mask[, wrong]).
+
+    With ``p.has_faults`` the returned callable yields a fourth array —
+    per-task wrong-choice flags (the scheduler picked a DOWN server and
+    was remapped) of the same (T, N, B) shape.  Without faults the
+    availability vector rides the carry as inert ones and every computed
+    quantity (observations, RNG stream, delays) is bit-identical to the
+    legacy scan.
+    """
     scale = envlib.state_scale(p)
 
     def episode(carry, ep: envlib.EpisodeData, key):
         qs0 = envlib.init_queues(p)
 
         def task_step(inner, tn):
-            sc, qs, key = inner
+            sc, qs, av, key = inner
             t, n = tn
             key, k_sel = jax.random.split(key)
             d = ep.d[t, n]
             workload = ep.rho[t, n] * ep.z[t, n]
             s = envlib.observe(p, qs, d, workload,
                                slack=ep.deadline[t, n],
-                               f=ep.f) / scale[None, :]
+                               f=ep.f, avail=av) / scale[None, :]
             actions, sc = scheduler.select(sc, s, n, k_sel)
             actions = actions % p.num_bs
-            delays = envlib.task_delays(p, ep, qs, t, n, actions)
+            if p.has_faults:
+                actions, wrong = envlib.mask_actions(av, qs.q_prev + qs.q_bef,
+                                                     actions)
+                penalty = p.fault.penalty_s * wrong
+            else:
+                wrong = jnp.zeros((p.num_bs,), bool)
+                penalty = 0.0
+            delays = envlib.task_delays(p, ep, qs, t, n, actions) + penalty
             qs = envlib.apply_actions(p, ep, qs, t, n, actions)
-            return (sc, qs, key), (delays, ep.mask[t, n])
+            return (sc, qs, av, key), (delays, ep.mask[t, n], wrong)
 
         def slot_step(inner, t):
             ns = jnp.arange(p.max_tasks)
             inner, per_task = jax.lax.scan(
                 task_step, inner, (jnp.full_like(ns, t), ns))
-            sc, qs, key = inner
-            qs = envlib.end_slot(p, ep, qs)
-            return (sc, qs, key), per_task
+            sc, qs, av, key = inner
+            if p.has_faults:
+                qs = envlib.end_slot(p, ep, qs, avail=av)
+                av = envlib.step_avail(p.fault, av, ep.avail_u[t])
+            else:
+                qs = envlib.end_slot(p, ep, qs)
+            return (sc, qs, av, key), per_task
 
-        (sc, _, _), (delays, mask) = jax.lax.scan(
-            slot_step, (carry, qs0, key), jnp.arange(p.num_slots))
+        av0 = envlib.init_avail(p.num_bs)
+        (sc, _, _, _), (delays, mask, wrong) = jax.lax.scan(
+            slot_step, (carry, qs0, av0, key), jnp.arange(p.num_slots))
+        if p.has_faults:
+            return sc, delays, mask, wrong
         return sc, delays, mask
 
     return episode
@@ -80,18 +109,30 @@ def evaluate_scheduler(scheduler: Scheduler, p: envlib.EnvParams,
         f = envlib.sample_capacities(k_f, p)
     if carry is None:
         carry = scheduler.init_carry()
-    all_delays, all_cls, all_dl, all_prio = [], [], [], []
+    all_delays, all_cls, all_dl, all_prio, all_wrong = [], [], [], [], []
     for _ in range(episodes):
         key, k_ep, k_run = jax.random.split(key, 3)
         ep_data = envlib.sample_episode(k_ep, p, f=f)
-        carry, delays, mask = episode(carry, ep_data, k_run)
+        res = episode(carry, ep_data, k_run)
+        carry, delays, mask = res[0], res[1], res[2]
         sel = np.asarray(mask) > 0
         all_delays.append(np.asarray(delays)[sel])
         all_cls.append(np.asarray(ep_data.cls)[sel])
         all_dl.append(np.asarray(ep_data.deadline)[sel])
         all_prio.append(np.asarray(ep_data.priority)[sel])
+        if p.has_faults:
+            all_wrong.append(np.asarray(res[3])[sel])
     delays = np.concatenate(all_delays) if all_delays else np.zeros((0,))
     out = {"count": int(delays.size), **_percentiles(delays)}
+    if p.has_faults:
+        wrong = (np.concatenate(all_wrong) if all_wrong
+                 else np.zeros((0,), bool))
+        # sim tasks always complete (wrong picks are remapped + penalised),
+        # so the terminal-status schema matches the live summarize() shape
+        out.update(completed=int(delays.size), failed=0, abandoned=0,
+                   retries=0, completion_rate=1.0,
+                   wrong_choice_rate=(float(wrong.mean())
+                                      if wrong.size else 0.0))
     if p.has_qos and delays.size:
         cls = np.concatenate(all_cls)
         dl = np.concatenate(all_dl)

@@ -26,10 +26,14 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+# re-exported so env consumers drive the fault process through envlib
+from repro.faults.simfault import (FaultParams, init_avail,  # noqa: F401
+                                   mask_actions, step_avail)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +49,15 @@ class EnvParams:
     priority-weighted, and ``deadline_penalty`` optionally adds a miss
     penalty to Eqn (9).  With an empty mix everything reduces exactly to
     the paper's setup.
+
+    ``fault`` (a :class:`repro.faults.FaultParams`) switches on the
+    availability extension: every ES runs an independent Bernoulli
+    up/down chain inside the episode scan, DOWN servers stop draining
+    (Eqn 4's ``f`` term gated), the observation grows per-ES
+    availability columns ``[.., a_1..a_B]`` appended LAST, and actions
+    landing on a DOWN server are remapped to the least-loaded available
+    one with ``penalty_s`` added to the task's delay.  ``fault=None``
+    reproduces the legacy environment bit-for-bit, same as ``qos_mix``.
     """
 
     num_bs: int = 20                 # B
@@ -73,10 +86,16 @@ class EnvParams:
     qos_mix: Tuple[Tuple[Any, float], ...] = ()
     slack_cap: float = 10.0          # seconds; clamps inf deadlines
     deadline_penalty: float = 0.0    # extra -reward per missed deadline
+    # fault extension (repro.faults): None = permanently healthy ESs
+    fault: Optional[FaultParams] = None
 
     @property
     def has_qos(self) -> bool:
         return len(self.qos_mix) > 0
+
+    @property
+    def has_faults(self) -> bool:
+        return self.fault is not None
 
     @property
     def z_hi(self) -> float:
@@ -90,8 +109,10 @@ class EnvParams:
     def state_dim(self) -> int:
         # s = [d_n, rho_n * z_n, q_{t-1,1..B}]  (Eqn 6)
         # + [slack, rho_n * z_n / f_1..B] when QoS classes are active
+        # + [a_1..B] availability (appended LAST) when faults are active
         base = 2 + self.num_bs
-        return base + (1 + self.num_bs if self.has_qos else 0)
+        return (base + (1 + self.num_bs if self.has_qos else 0)
+                + (self.num_bs if self.has_faults else 0))
 
     @property
     def action_dim(self) -> int:
@@ -113,6 +134,10 @@ class EpisodeData(NamedTuple):
     cls: jnp.ndarray      # (T, N, B) int32 class index (0 without QoS)
     deadline: jnp.ndarray  # (T, N, B) service budget, inf = best-effort
     priority: jnp.ndarray  # (T, N, B) priority weight (1 without QoS)
+    # fault extension: per-slot uniforms driving the Bernoulli up/down
+    # chain (drawn from a folded key, so every legacy field is
+    # bit-identical whether or not faults are enabled)
+    avail_u: jnp.ndarray  # (T, B) U[0,1)
 
 
 def sample_capacities(key, p: EnvParams) -> jnp.ndarray:
@@ -174,6 +199,8 @@ def sample_episode(key, p: EnvParams, f=None) -> EpisodeData:
         cls=cls.astype(jnp.int32),
         deadline=deadline,
         priority=priority,
+        avail_u=jax.random.uniform(jax.random.fold_in(key, 0xFA),
+                                   (p.num_slots, p.num_bs)),
     )
 
 
@@ -188,7 +215,7 @@ def init_queues(p: EnvParams) -> QueueState:
 
 
 def observe(p: EnvParams, qs: QueueState, d, workload,
-            slack=None, f=None) -> jnp.ndarray:
+            slack=None, f=None, avail=None) -> jnp.ndarray:
     """Per-task state vector (Eqn 6), vectorised over the B stations.
 
     d, workload: (B,) — the n-th task of each BS.  Returns (B, state_dim).
@@ -198,6 +225,10 @@ def observe(p: EnvParams, qs: QueueState, d, workload,
     features ``workload / f_b'`` — the task's expected compute seconds on
     each target, which is what makes heterogeneous capacities visible to
     the policy before queues build up.
+
+    With faults enabled the row additionally carries the per-ES
+    availability vector (appended LAST, matching the live cluster) so a
+    policy can learn to steer around DOWN servers.
     """
     qrep = jnp.broadcast_to(qs.q_prev[None, :], (p.num_bs, p.num_bs))
     cols = [d[:, None], workload[:, None], qrep]
@@ -207,6 +238,12 @@ def observe(p: EnvParams, qs: QueueState, d, workload,
                              "per-task deadline slack and capacities f")
         cols.append(jnp.minimum(slack, p.slack_cap)[:, None])
         cols.append(workload[:, None] / f[None, :])
+    if p.has_faults:
+        if avail is None:
+            raise ValueError("fault-enabled EnvParams: observe() needs "
+                             "the per-ES availability vector")
+        cols.append(jnp.broadcast_to(avail[None, :],
+                                     (p.num_bs, p.num_bs)))
     return jnp.concatenate(cols, axis=1)
 
 
@@ -236,9 +273,16 @@ def apply_actions(p: EnvParams, ep: EpisodeData, qs: QueueState, t, n,
     return QueueState(q_prev=qs.q_prev, q_bef=qs.q_bef + placed)
 
 
-def end_slot(p: EnvParams, ep: EpisodeData, qs: QueueState) -> QueueState:
-    """Queue update at slot end (Eqn 4)."""
-    q = jnp.maximum(qs.q_prev + qs.q_bef - ep.f * p.slot_seconds, 0.0)
+def end_slot(p: EnvParams, ep: EpisodeData, qs: QueueState,
+             avail=None) -> QueueState:
+    """Queue update at slot end (Eqn 4).
+
+    With faults enabled the caller passes the per-ES availability vector
+    and DOWN servers (avail == 0) drain nothing this slot — their backlog
+    carries over untouched until they come back up.
+    """
+    f = ep.f if avail is None else ep.f * avail
+    q = jnp.maximum(qs.q_prev + qs.q_bef - f * p.slot_seconds, 0.0)
     return QueueState(q_prev=q, q_bef=jnp.zeros_like(qs.q_bef))
 
 
@@ -255,4 +299,6 @@ def state_scale(p: EnvParams) -> jnp.ndarray:
         parts.append(jnp.array([p.slack_cap], jnp.float32))
         parts.append(jnp.full((p.num_bs,), w_hi / p.f_range[0],
                               jnp.float32))
+    if p.has_faults:
+        parts.append(jnp.ones((p.num_bs,), jnp.float32))
     return jnp.concatenate(parts)

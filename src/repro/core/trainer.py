@@ -144,7 +144,7 @@ def build_episode_fn(method: str, p: envlib.EnvParams,
                         valid=jnp.zeros((p.num_bs,), bool))
 
         def task_step(carry, tn):
-            states, qs, pend, key = carry
+            states, qs, pend, av, key = carry
             t, n = tn
             key, k_act, k_upd = jax.random.split(key, 3)
             d = ep.d[t, n]
@@ -152,7 +152,7 @@ def build_episode_fn(method: str, p: envlib.EnvParams,
             mask = ep.mask[t, n] > 0
             s = envlib.observe(p, qs, d, workload,
                                slack=ep.deadline[t, n],
-                               f=ep.f) / scale[None, :]
+                               f=ep.f, avail=av) / scale[None, :]
 
             if learned:
                 x_next_lat = vlatent(states, n) if method == "lad-ts" else \
@@ -172,7 +172,16 @@ def build_episode_fn(method: str, p: envlib.EnvParams,
                 x_used = jnp.zeros((p.num_bs, p.action_dim))
 
             actions = actions % p.num_bs
-            delays = envlib.task_delays(p, ep, qs, t, n, actions)
+            if p.has_faults:
+                # the agent OWNS its choice: the chosen action goes into
+                # replay (so it learns the wrong-choice penalty), while
+                # the cluster EXECUTES the availability-masked remap
+                executed, wrong = envlib.mask_actions(
+                    av, qs.q_prev + qs.q_bef, actions)
+                penalty = p.fault.penalty_s * wrong
+            else:
+                executed, penalty = actions, 0.0
+            delays = envlib.task_delays(p, ep, qs, t, n, executed) + penalty
             # Eqn (9), priority-weighted (priority == 1 without QoS) with
             # an optional deadline-miss penalty
             r = -delays * cfg.reward_scale * ep.priority[t, n]
@@ -180,7 +189,7 @@ def build_episode_fn(method: str, p: envlib.EnvParams,
                 r -= (cfg.reward_scale * p.deadline_penalty
                       * ep.priority[t, n]
                       * (delays > ep.deadline[t, n]))
-            qs = envlib.apply_actions(p, ep, qs, t, n, actions)
+            qs = envlib.apply_actions(p, ep, qs, t, n, executed)
 
             if learned and train:
                 size = states.replay.size                     # (B,)
@@ -200,19 +209,24 @@ def build_episode_fn(method: str, p: envlib.EnvParams,
 
             pend = Pending(s=s, x=x_used, a=actions, r=r, valid=mask)
             stats = (jnp.sum(delays * ep.mask[t, n]), jnp.sum(ep.mask[t, n]))
-            return (states, qs, pend, key), stats
+            return (states, qs, pend, av, key), stats
 
         def slot_step(carry, t):
-            states, qs, pend, key = carry
+            states, qs, pend, av, key = carry
             ns = jnp.arange(p.max_tasks)
-            (states, qs, pend, key), stats = jax.lax.scan(
-                task_step, (states, qs, pend, key),
+            (states, qs, pend, av, key), stats = jax.lax.scan(
+                task_step, (states, qs, pend, av, key),
                 (jnp.full_like(ns, t), ns))
-            qs = envlib.end_slot(p, ep, qs)
-            return (states, qs, pend, key), stats
+            if p.has_faults:
+                qs = envlib.end_slot(p, ep, qs, avail=av)
+                av = envlib.step_avail(p.fault, av, ep.avail_u[t])
+            else:
+                qs = envlib.end_slot(p, ep, qs)
+            return (states, qs, pend, av, key), stats
 
-        (states, qs, pend, key), stats = jax.lax.scan(
-            slot_step, (states, qs0, pend0, key), jnp.arange(p.num_slots))
+        av0 = envlib.init_avail(p.num_bs)
+        (states, qs, pend, av, key), stats = jax.lax.scan(
+            slot_step, (states, qs0, pend0, av0, key), jnp.arange(p.num_slots))
         tot_delay = stats[0].sum()
         tot_tasks = stats[1].sum()
         return states, tot_delay / jnp.maximum(tot_tasks, 1.0)

@@ -1,0 +1,23 @@
+"""Fault injection, health states, and retry/recovery policy.
+
+  * ``policy``   — engine ``Health`` states (HEALTHY/DEGRADED/DOWN) and
+                   the :class:`RetryPolicy` (capped retries, exponential
+                   backoff, per-request watchdog).
+  * ``injector`` — deterministic-per-seed live fault schedules
+                   (:class:`FaultInjector`: crash / stall / slowdown /
+                   recover events on a cluster-relative clock).
+  * ``simfault`` — the simulator twin: a per-ES Bernoulli up/down chain
+                   (:class:`FaultParams`) with action masking and a
+                   wrong-choice penalty inside the jitted episode scan.
+"""
+from repro.faults.injector import (FaultEvent, FaultInjector, FaultSpec,
+                                   single_crash)
+from repro.faults.policy import AVAILABILITY, Health, RetryPolicy
+from repro.faults.simfault import (FaultParams, init_avail, mask_actions,
+                                   step_avail)
+
+__all__ = [
+    "AVAILABILITY", "FaultEvent", "FaultInjector", "FaultParams",
+    "FaultSpec", "Health", "RetryPolicy", "init_avail", "mask_actions",
+    "single_crash", "step_avail",
+]

@@ -1,0 +1,78 @@
+"""Fault process for the jitted ``repro.core.env`` episode scan.
+
+The live cluster injects faults from a wall-clock schedule; the
+simulator needs the same phenomenon as a MARKOV process it can scan
+over: each edge server is an independent Bernoulli up/down chain, one
+transition per time slot —
+
+    up   -> down  w.p. ``p_down``
+    down -> up    w.p. ``p_up``
+
+so the stationary availability is ``p_up / (p_up + p_down)`` and the
+mean downtime is ``1 / p_up`` slots.  The scan threads a float ``(B,)``
+availability vector: DOWN servers stop draining their queues (Eqn 4's
+``f`` term is gated), the observation grows a per-ES availability
+column, and actions landing on a DOWN server are REMAPPED to the
+least-loaded available one with ``penalty_s`` added to the task's delay
+— the cost of discovering the failure and re-offloading, which is what
+teaches a trained policy to read the availability features.
+
+``FaultParams`` is a frozen dataclass so it can sit inside the frozen
+``EnvParams`` exactly like ``qos_mix``; ``fault=None`` keeps every code
+path byte-identical to the legacy environment.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultParams:
+    """Bernoulli up/down process + wrong-choice penalty for the sim."""
+
+    p_down: float = 0.05      # per-slot P(healthy -> down)
+    p_up: float = 0.5         # per-slot P(down -> recovered)
+    penalty_s: float = 2.0    # delay added when the pick was DOWN
+
+    def __post_init__(self):
+        if not (0.0 <= self.p_down <= 1.0 and 0.0 < self.p_up <= 1.0):
+            raise ValueError("p_down in [0,1] and p_up in (0,1] required")
+        if self.penalty_s < 0:
+            raise ValueError("penalty_s must be non-negative")
+
+    @property
+    def stationary_availability(self) -> float:
+        return self.p_up / max(self.p_up + self.p_down, 1e-12)
+
+
+def init_avail(num_bs: int) -> jnp.ndarray:
+    """Every ES starts an episode healthy."""
+    return jnp.ones((num_bs,), jnp.float32)
+
+
+def step_avail(fp: FaultParams, avail: jnp.ndarray,
+               u: jnp.ndarray) -> jnp.ndarray:
+    """One Bernoulli up/down transition per ES (``u``: (B,) uniforms)."""
+    up = avail > 0.5
+    go_down = up & (u < fp.p_down)
+    go_up = ~up & (u < fp.p_up)
+    return jnp.where(go_down, 0.0,
+                     jnp.where(go_up, 1.0, avail)).astype(jnp.float32)
+
+
+def mask_actions(avail: jnp.ndarray, load: jnp.ndarray,
+                 actions: jnp.ndarray):
+    """Remap picks landing on DOWN servers to the least-loaded UP one.
+
+    Returns ``(actions, wrong)`` where ``wrong`` flags the remapped
+    picks (the wrong-choice penalty applies to exactly these).  When
+    every server is down there is no right choice: picks stand
+    unpenalised and the queue dynamics (no draining) carry the cost.
+    """
+    up = avail > 0.5
+    any_up = up.any()
+    fallback = jnp.argmin(jnp.where(up, load, jnp.inf)).astype(actions.dtype)
+    wrong = (~up[actions]) & any_up
+    return jnp.where(wrong, fallback, actions), wrong

@@ -16,6 +16,14 @@ service classes, engines drain in priority/EDF order, learned policies
 train on the extended observation (deadline slack + per-engine
 affinity), ``--scheduler deadline`` becomes available, and the summary
 adds deadline-miss rate and priority-weighted goodput.
+
+``--chaos`` switches on the fault layer (``repro.faults``): a
+deterministic-per-``--fault-seed`` schedule crashes / stalls / slows
+engines mid-trace, orphaned requests are retried with backoff, learned
+policies train against the fault-enabled simulator (availability
+observation + wrong-choice penalty), ``--scheduler failure-aware``
+masks DOWN engines, and the summary adds the terminal-status breakdown
+(completed / failed / abandoned, retries, orphan-recovery latency).
 """
 from __future__ import annotations
 
@@ -31,26 +39,31 @@ from repro.core.agents import AgentConfig
 from repro.core.diffusion import DiffusionPolicyConfig
 from repro.core.env import EnvParams
 from repro.core.trainer import LEARNED, train_method
+from repro.faults import FaultInjector, FaultParams, FaultSpec, RetryPolicy
 from repro.serving.builders import build_engines, warmup
 from repro.workload import DEFAULT_MIX
 
 
 def build_scheduler(name: str, n_edge: int, train_episodes: int, seed: int,
-                    qos: bool = False):
+                    qos: bool = False, chaos: bool = False):
     if name == "deadline" and not qos:
         raise SystemExit("--scheduler deadline needs the QoS-extended "
                          "observation; pass --qos")
+    if name == "failure-aware":
+        return make_scheduler(name, n_edge, qos=qos)
     if name in BASELINES:
         return make_scheduler(name, n_edge)
     if name not in LEARNED:
         raise SystemExit(f"unknown scheduler {name!r}; options: "
                          f"{', '.join(BASELINES + LEARNED)}")
     p = EnvParams(num_bs=n_edge, num_slots=8, max_tasks=6,
-                  qos_mix=DEFAULT_MIX if qos else ())
+                  qos_mix=DEFAULT_MIX if qos else (),
+                  fault=FaultParams() if chaos else None)
     acfg = AgentConfig(train_after=40, replay_capacity=200,
                        diffusion=DiffusionPolicyConfig(num_steps=3))
     print(f"[serve] training {name} in-sim for {train_episodes} episodes "
-          f"({n_edge} edge servers)...")
+          f"({n_edge} edge servers"
+          f"{', fault-enabled' if chaos else ''})...")
     _, states = train_method(name, p, acfg, episodes=train_episodes,
                              key=jax.random.key(seed))
     return PolicyScheduler(name, acfg, states, num_engines=n_edge,
@@ -74,6 +87,11 @@ def main():
     ap.add_argument("--qos", action="store_true",
                     help="mixed interactive/standard/batch QoS trace + "
                          "extended scheduler observation")
+    ap.add_argument("--chaos", action="store_true",
+                    help="inject a deterministic fault schedule (one "
+                         "crash + one slowdown) and retry orphans")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the --chaos fault schedule")
     ap.add_argument("--sample", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -91,9 +109,20 @@ def main():
 
     scheduler = build_scheduler(args.scheduler, args.edges,
                                 args.train_episodes, args.seed,
-                                qos=args.qos)
+                                qos=args.qos, chaos=args.chaos)
+    injector = retry = None
+    if args.chaos:
+        # horizon = expected trace span + service tail headroom
+        horizon = args.requests / max(args.rate, 1e-9) + 2.0
+        injector = FaultInjector.from_spec(
+            FaultSpec(crashes=1, slowdowns=1), args.edges,
+            horizon_s=horizon, seed=args.fault_seed)
+        retry = RetryPolicy()
+        for ev in injector.describe():
+            print(f"[serve] fault @{ev['t_s']:.2f}s engine={ev['engine']} "
+                  f"{ev['kind']}")
     cluster = EdgeCluster(engines, scheduler, seed=args.seed,
-                          qos_obs=args.qos)
+                          qos_obs=args.qos, faults=injector, retry=retry)
     trace = poisson_trace(args.requests, rate=args.rate,
                           prompt_len=args.prompt_len,
                           max_new_tokens=args.tokens, vocab_size=vocab,
@@ -107,17 +136,27 @@ def main():
                 (1, cfg0.vision_patches, cfg0.vision_dim))
     done = cluster.run(trace)
     for r in sorted(done, key=lambda r: r.rid):
+        if not r.done:          # failed / abandoned: no timestamps
+            print(f"[serve] req {r.rid}: {r.status} ({r.fail_reason})")
+            continue
         tps = (f"tok/s={len(r.tokens)/r.decode_s:.1f}"
                if r.decode_s > 0 else "tok/s=n/a")
+        retried = f" attempts={r.attempts}" if r.attempts > 1 else ""
         print(f"[serve] req {r.rid}: engine={r.engine_id} "
               f"queue={r.queue_s*1e3:.1f}ms "
               f"prefill={r.prefill_s*1e3:.1f}ms "
               f"decode={r.decode_s*1e3:.1f}ms "
-              f"service={r.service_s*1e3:.1f}ms {tps}")
+              f"service={r.service_s*1e3:.1f}ms {tps}{retried}")
     st = summarize(done)
     line = (f"[serve] {scheduler.name}: n={st['count']} "
             f"mean={st['mean_s']*1e3:.1f}ms p95={st['p95_s']*1e3:.1f}ms "
             f"max={st['max_s']*1e3:.1f}ms")
+    if args.chaos:
+        fs = cluster.fault_stats
+        line += (f" cr={st['completion_rate']:.3f}"
+                 f" retries={st['retries']}"
+                 f" failed={st['failed']} abandoned={st['abandoned']}"
+                 f" orphans={fs['orphaned']}")
     if args.qos:
         line += (f" miss={st['deadline_miss_rate']:.2f}"
                  f" goodput={st['weighted_goodput']:.2f}")

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cluster.request import Request
+from repro.faults.policy import AVAILABILITY, Health
 from repro.serving.paged_kv import BlockTable, PagePool, cdiv, paged_supported
 from repro.train.steps import (make_decode_step, make_paged_decode_step,
                                make_paged_prefill_step, make_prefill_step)
@@ -114,6 +115,12 @@ class ServeEngine:
         self._ewma_tok_s = 0.0         # measured seconds per decode round
         self._next_rid = 0
         self.peak_inflight = 0
+        # fault-tolerance state (repro.faults)
+        self.health = Health.HEALTHY
+        self.fail_reason: Optional[str] = None
+        self._stall_until = 0.0        # DEGRADED: frozen until this clock
+        self._slow_every = 1           # DEGRADED: serve 1 step out of k
+        self._step_seq = 0
 
         self.paged = paged_supported(cfg) if paged is None else bool(paged)
         if self.paged:
@@ -151,12 +158,36 @@ class ServeEngine:
     def admit(self, req: Request) -> None:
         """Enqueue a request; it joins the decode batch when capacity
         (a dense slot, or a lane + enough free pages) opens up."""
+        if self.health is Health.DOWN:
+            raise RuntimeError(
+                f"engine {getattr(self, 'engine_id', '?')} "
+                f"({self.arch_id}) is DOWN"
+                f"{f' ({self.fail_reason})' if self.fail_reason else ''}; "
+                f"cannot admit request {req.rid}")
         req.t_enqueue = self._clock()
         req.engine_id = getattr(self, "engine_id", None)
         self._queue.append(req)
 
     def step(self) -> List[Request]:
-        """One scheduling iteration; returns requests finished this step."""
+        """One scheduling iteration; returns requests finished this step.
+
+        A DOWN engine is inert.  A DEGRADED engine is either stalled
+        (frozen until ``_stall_until``, then self-healing — a transient
+        straggler) or slowed (serving one step out of ``_slow_every``
+        until an explicit :meth:`recover`)."""
+        if self.health is Health.DOWN:
+            return []
+        if self.health is Health.DEGRADED:
+            now = self._clock()
+            if now < self._stall_until:
+                return []
+            if self._stall_until and self._slow_every <= 1:
+                self.recover()          # stall window elapsed
+            else:
+                self._stall_until = 0.0
+                self._step_seq += 1
+                if self._step_seq % self._slow_every:
+                    return []
         if self.paged:
             return self._step_paged()
         return self._step_dense()
@@ -333,12 +364,91 @@ class ServeEngine:
         self._ewma_tok_s = 0.0
         self._next_rid = 0
         self.peak_inflight = 0
+        self.health = Health.HEALTHY
+        self.fail_reason = None
+        self._stall_until = 0.0
+        self._slow_every = 1
+        self._step_seq = 0
         if self.paged:
             self._lanes = [None] * self.max_lanes
             self._pool.reset()
         else:
             self._slots = [None] * self.kv_slots
             self._last_tok = [None] * self.kv_slots
+
+    # ------------------------------------------------------------------
+    # fault tolerance: health transitions (repro.faults)
+    # ------------------------------------------------------------------
+    def fail(self, reason: str = "injected crash") -> List[Request]:
+        """Hard crash: mark DOWN, drain queued + in-flight requests and
+        reclaim every KV page / dense slot they held.
+
+        Returns the orphaned requests (queued first, then in-flight) so
+        the cluster can re-offload them; their per-attempt state is NOT
+        reset here — recovery policy belongs to the caller."""
+        orphans: List[Request] = list(self._queue)
+        self._queue.clear()
+        if self.paged:
+            for i, lane in enumerate(self._lanes):
+                if lane is not None:
+                    orphans.append(lane.req)
+                    self._free_lane(i)
+        else:
+            for i, req in enumerate(self._slots):
+                if req is not None:
+                    orphans.append(req)
+                    self._slots[i] = None
+                    self._last_tok[i] = None
+        self.health = Health.DOWN
+        self.fail_reason = str(reason)
+        return orphans
+
+    def recover(self) -> None:
+        """Return to HEALTHY after a crash, stall, or slowdown window."""
+        self.health = Health.HEALTHY
+        self.fail_reason = None
+        self._stall_until = 0.0
+        self._slow_every = 1
+
+    def degrade(self, *, stall_s: float = 0.0, slow_every: int = 1,
+                reason: str = "injected degradation") -> None:
+        """Soft fault: freeze for ``stall_s`` seconds (transient
+        straggler, self-healing) and/or serve only one step out of
+        ``slow_every`` (sustained slowdown, until :meth:`recover`)."""
+        if self.health is Health.DOWN:
+            raise RuntimeError("cannot degrade a DOWN engine; recover it "
+                               "first")
+        self.health = Health.DEGRADED
+        self.fail_reason = str(reason)
+        if stall_s > 0:
+            self._stall_until = self._clock() + stall_s
+        self._slow_every = max(int(slow_every), 1)
+
+    @property
+    def available(self) -> bool:
+        """Placement-eligible (DEGRADED still serves, DOWN does not)."""
+        return self.health is not Health.DOWN
+
+    @property
+    def availability(self) -> float:
+        """Observation feature: 1 healthy, 0.5 degraded, 0 down."""
+        return AVAILABILITY[self.health]
+
+    @property
+    def kv_leak(self) -> int:
+        """Outstanding KV reservations (pages, or busy dense slots).
+
+        0 whenever the engine is idle — the crash-recovery invariant the
+        chaos tests assert: a crash mid-prefill or mid-decode must return
+        the accounting to zero."""
+        if self.paged:
+            return self.num_pages - 1 - self._pool.num_free
+        return sum(r is not None for r in self._slots)
+
+    def shed(self, pred) -> List[Request]:
+        """Remove queued (not yet running) requests matching ``pred`` —
+        the cluster watchdog's shedding hook."""
+        return self._queue.drain(pred)
 
     # ------------------------------------------------------------------
     # backlog signals (the scheduler's q_b / Eqn-3 observation)

@@ -91,6 +91,7 @@ def priority_of(req) -> float:
 
 def scaled(cls: QoSClass, *, deadline_s: Optional[float] = None,
            z_range: Optional[Tuple[int, int]] = None,
+           prompt_len: Optional[int] = None,
            model_pref: Optional[str] = None) -> QoSClass:
     """Benchmark helper: rescale a class to a scenario's time/token scale."""
     kw = {}
@@ -98,6 +99,8 @@ def scaled(cls: QoSClass, *, deadline_s: Optional[float] = None,
         kw["deadline_s"] = deadline_s
     if z_range is not None:
         kw["z_range"] = z_range
+    if prompt_len is not None:
+        kw["prompt_len"] = prompt_len
     if model_pref is not None:
         kw["model_pref"] = model_pref
     return dataclasses.replace(cls, **kw)

@@ -64,6 +64,21 @@ class EDFQueue:
         aggregate backlog signals like ``pending_tokens``."""
         return (entry[-1] for entry in self._heap)
 
+    def drain(self, pred) -> List[object]:
+        """Remove and return every queued request matching ``pred``.
+
+        The watchdog's shedding hook: surviving entries keep their
+        original (priority, deadline, seq) keys, so relative order —
+        including FIFO ties — is preserved exactly.
+        """
+        kept, out = [], []
+        for entry in self._heap:
+            (out if pred(entry[-1]) else kept).append(entry)
+        if out:
+            heapq.heapify(kept)
+            self._heap = kept
+        return [entry[-1] for entry in out]
+
     def clear(self) -> None:
         self._heap.clear()
         self._seq = 0
