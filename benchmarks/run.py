@@ -30,6 +30,11 @@ Mapping to the paper:
               plus the fault-enabled simulator's wrong-choice rates
   kernels  -> (systems) Pallas kernel microbenches
   roofline -> (systems) dry-run roofline terms per (arch x shape x mesh)
+  stress   -> (systems) saturation ramp: Poisson arrival rate climbs a
+              geometric ladder per scheduler until deadline goodput
+              collapses (per-stage throughput/goodput + p50/p95/p99,
+              saturation knee, overlap-vs-serial stepping A/B);
+              writes BENCH_stress.json with --out-dir
 """
 from __future__ import annotations
 
@@ -45,7 +50,7 @@ def main() -> None:
     ap.add_argument("--scale", choices=["quick", "paper"], default="quick")
     ap.add_argument("--only", default=None,
                     help="comma list: fig5,fig6a,fig6b,fig7a,fig7b,fig8,"
-                         "tablev,closedloop,chaos,kernels,roofline")
+                         "tablev,closedloop,chaos,kernels,roofline,stress")
     ap.add_argument("--out-dir", default=None,
                     help="write BENCH_<name>.json result files here")
     args = ap.parse_args()
@@ -117,6 +122,11 @@ def main() -> None:
     if want("roofline"):
         from benchmarks.roofline import bench_roofline
         rows += bench_roofline()
+    if want("stress"):
+        from benchmarks.stress import bench_stress
+        r, recs = bench_stress(args.scale)
+        rows += r
+        emit("stress", recs)
 
     print("name,us_per_call,derived")
     for r in rows:

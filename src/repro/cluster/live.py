@@ -75,7 +75,9 @@ class EdgeCluster:
                  faults: Union[FaultInjector, Iterable[FaultEvent],
                                None] = None,
                  retry: Optional[RetryPolicy] = None,
-                 fault_obs: Optional[bool] = None):
+                 fault_obs: Optional[bool] = None,
+                 overlap: bool = True):
+        self.overlap = bool(overlap)
         if scheduler.num_engines != len(engines):
             raise ValueError(
                 f"scheduler targets {scheduler.num_engines} engines, "
@@ -303,20 +305,46 @@ class EdgeCluster:
         """One cluster iteration; returns requests that reached a
         TERMINAL state this step (completed, failed, or abandoned).
 
-        Each engine's ``step()`` is isolated: an exception quarantines
-        that engine (DOWN, KV reclaimed, requests re-offloaded) instead
-        of unwinding the whole closed loop."""
+        Overlapped stepping (default): ALL engines' rounds are
+        dispatched before ANY engine's results are collected, so E
+        engines' prefill chunks + decode rounds execute concurrently on
+        device instead of serializing E blocking host round-trips — with
+        bit-identical tokens/statuses to ``overlap=False`` serial
+        stepping (each engine's dispatch->collect pair is exactly its
+        serial ``step()``; only the interleaving across engines changes).
+
+        Each engine's work is isolated: an exception quarantines that
+        engine (DOWN, KV reclaimed, requests re-offloaded) instead of
+        unwinding the whole closed loop."""
         now_rel = self._now_rel()
         now = self._clock()
         done: List[Request] = []
         done += self._apply_faults(now_rel)
         done += self._flush_retries(now)
         done += self._shed_hopeless(now)
+        if not self.overlap:
+            for i, e in enumerate(self.engines):
+                if not e.available:
+                    continue
+                try:
+                    done += e.step()
+                except Exception as exc:  # noqa: BLE001 — quarantine all
+                    self.fault_stats["quarantined"] += 1
+                    done += self._crash(i, f"quarantined: {exc!r}")
+            return done
         for i, e in enumerate(self.engines):
             if not e.available:
                 continue
             try:
-                done += e.step()
+                e.dispatch()
+            except Exception as exc:   # noqa: BLE001 — quarantine anything
+                self.fault_stats["quarantined"] += 1
+                done += self._crash(i, f"quarantined: {exc!r}")
+        for i, e in enumerate(self.engines):
+            if not e.available:         # crashed during dispatch: pending
+                continue                # already dropped by fail()
+            try:
+                done += e.collect()
             except Exception as exc:   # noqa: BLE001 — quarantine anything
                 self.fault_stats["quarantined"] += 1
                 done += self._crash(i, f"quarantined: {exc!r}")

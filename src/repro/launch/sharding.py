@@ -176,7 +176,8 @@ def param_shardings(mesh: Mesh, params) -> object:
 
 
 def _state_leaf_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
-                     batch_axes) -> P:
+                     batch_axes,
+                     axis_sizes: Optional[Dict[str, int]] = None) -> P:
     name = path[-1]
     stacked = "scan" in path
     off = 1 if stacked else 0
@@ -184,13 +185,26 @@ def _state_leaf_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
     spec = [None] * len(shape)
     if name == "pos" or nd == 0:
         return P(*spec)
-    spec[off] = batch_axes  # leading real dim is always batch
+
+    def put(dim: int, axes) -> None:
+        # divisibility guard: NamedSharding on concrete arrays forbids
+        # uneven partitions, so a dim the mesh axis doesn't divide falls
+        # back to replication (e.g. a 6-lane dense pool on 4-way 'data')
+        if axis_sizes is not None:
+            size = 1
+            for a in (axes if isinstance(axes, tuple) else (axes,)):
+                size *= axis_sizes.get(a, 1)
+            if size > 1 and shape[dim] % size != 0:
+                return
+        spec[dim] = axes
+
+    put(off, batch_axes)  # leading real dim is always batch
     if name in ("k", "v", "k_scale", "v_scale") and nd == 4:
-        spec[off + 2] = "model"       # KV cache: shard the sequence dim
+        put(off + 2, "model")         # KV cache: shard the sequence dim
     elif name == "C" and nd == 4:
-        spec[off + 2] = "model"       # mLSTM matrix memory: shard head_dim
+        put(off + 2, "model")         # mLSTM matrix memory: shard head_dim
     elif name == "n" and nd == 3:
-        spec[off + 2] = "model"
+        put(off + 2, "model")
     # (B, d)-shaped scalars (slstm c/n/h/m, rglru h) and conv buffers:
     # batch-sharded only.
     return P(*spec)
@@ -201,11 +215,22 @@ def state_pspecs(states, mesh: Optional[Mesh] = None,
     if batch_axes == "__auto__":
         batch_axes = ("pod", "data") if (mesh is not None and
                                          "pod" in mesh.axis_names) else "data"
+    axis_sizes = dict(mesh.shape) if mesh is not None else None
     flat = jax.tree_util.tree_flatten_with_path(states)
     specs = []
     for keypath, leaf in flat[0]:
         path = tuple(
             str(getattr(k, "key", getattr(k, "name", str(k))))
             for k in keypath)
-        specs.append(_state_leaf_spec(path, leaf.shape, batch_axes))
+        specs.append(_state_leaf_spec(path, leaf.shape, batch_axes,
+                                      axis_sizes))
     return jax.tree_util.tree_unflatten(flat[1], specs)
+
+
+def state_shardings(mesh: Mesh, states) -> object:
+    """NamedSharding pytree for KV / recurrent serving state on ``mesh``
+    (divisibility-guarded: indivisible dims replicate)."""
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec),
+        state_pspecs(states, mesh),
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,6 +1,20 @@
 """Shared engine-cluster construction: one factory + warmup for the
 launcher, the examples, and the benchmarks (so they all measure
-identically configured clusters)."""
+identically configured clusters).
+
+Fleet construction is compile-cheap: engines fetch their jitted
+prefill/decode steps from the shared compiled-step cache
+(``repro.serving.compiled``), so N same-config replicas cost ONE
+compile, not N — ``build_engines``/``build_fleet`` at fleet scale go
+from O(E) compiles to O(distinct archs x depths).
+
+Sharded big-model engines: :func:`build_sharded_engine` places a single
+large config (``mixtral-8x22b``, ``dbrx-132b``) across a mesh — params
+via ``launch.sharding.param_shardings``, KV/recurrent state via
+``state_pspecs`` — using the 1-device smoke mesh on CPU CI and
+``make_production_mesh()`` on real device slices.  ``build_engines`` /
+``build_fleet`` accept the same ``mesh=`` to shard every replica.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -9,6 +23,7 @@ from typing import List, Optional, Sequence
 import jax
 
 from repro.configs import get_config, reduced
+from repro.launch.mesh import make_smoke_mesh
 from repro.models.transformer import init_params
 from repro.serving.engine import ServeEngine
 
@@ -23,12 +38,14 @@ def build_engines(arch: str, n_edge: int, max_len: int, *,
                   depths: Optional[Sequence[int]] = None,
                   seed0: int = 0, paged: Optional[bool] = None,
                   page_size: int = 16, max_lanes: Optional[int] = None,
-                  prefill_chunk: int = 64) -> List[ServeEngine]:
+                  prefill_chunk: int = 64,
+                  mesh=None) -> List[ServeEngine]:
     """n_edge reduced-config replicas of ``arch`` with per-engine depth.
 
     ``paged=None`` auto-selects the shared page pool on all-attention
     configs and the dense slot pool elsewhere; the remaining paged knobs
-    are ignored by dense engines."""
+    are ignored by dense engines.  Same-depth replicas share compiled
+    steps through the module cache."""
     depths = list(depths) if depths is not None else default_depths(n_edge)
     engines = []
     for i in range(n_edge):
@@ -40,7 +57,7 @@ def build_engines(arch: str, n_edge: int, max_len: int, *,
                                    paged=paged, page_size=page_size,
                                    max_lanes=max_lanes,
                                    prefill_chunk=prefill_chunk,
-                                   arch_id=arch))
+                                   arch_id=arch, mesh=mesh))
     return engines
 
 
@@ -49,14 +66,17 @@ def build_fleet(archs: Sequence[str], max_len: int, *,
                 depths: Optional[Sequence[int]] = None,
                 seed0: int = 0, paged: Optional[bool] = None,
                 page_size: int = 16, max_lanes: Optional[int] = None,
-                prefill_chunk: int = 64) -> List[ServeEngine]:
+                prefill_chunk: int = 64,
+                mesh=None) -> List[ServeEngine]:
     """Heterogeneous fleet: one engine PER ENTRY of ``archs``.
 
     Unlike :func:`build_engines` (n replicas of one arch), each engine
     here hosts a different reduced model-zoo config — mixed arch
     families mean mixed KV backends (paged attention pools next to
     dense xLSTM/RG slot pools) behind the same cluster interface.  The
-    engine's ``arch_id`` tags it for request ``model_pref`` affinity."""
+    engine's ``arch_id`` tags it for request ``model_pref`` affinity.
+    Repeated (arch, depth) entries share one compiled step via the
+    module-level cache."""
     archs = list(archs)
     depths = (list(depths) if depths is not None
               else default_depths(len(archs)))
@@ -70,14 +90,50 @@ def build_fleet(archs: Sequence[str], max_len: int, *,
                                    paged=paged, page_size=page_size,
                                    max_lanes=max_lanes,
                                    prefill_chunk=prefill_chunk,
-                                   arch_id=arch))
+                                   arch_id=arch, mesh=mesh))
     return engines
+
+
+def build_sharded_engine(arch: str, max_len: int, *, mesh=None,
+                         full_scale: bool = False, num_layers: int = 2,
+                         kv_slots: int = 4, sample: bool = False,
+                         paged: Optional[bool] = None, page_size: int = 16,
+                         max_lanes: Optional[int] = None,
+                         prefill_chunk: int = 64,
+                         seed: int = 0) -> ServeEngine:
+    """One BIG-model engine with params + KV placed across a mesh.
+
+    This is the serving entry point for the configs a single chip cannot
+    hold (``mixtral-8x22b``, ``dbrx-132b``): parameters shard via the
+    path-based ``param_shardings`` rules (tensor-parallel 'model' +
+    FSDP 'data'), the KV page pool / dense slot pool via ``state_pspecs``
+    — divisibility-guarded, so indivisible dims replicate instead of
+    erroring — and every prefill/decode step runs inside the mesh's
+    ShardingContext.
+
+    ``mesh=None`` uses the 1-device smoke mesh (CPU CI exercises the
+    exact placement code paths); pass ``make_production_mesh()`` on a
+    real slice.  ``full_scale=False`` serves the reduced config at the
+    true layer pattern family (CI-sized); ``full_scale=True`` keeps the
+    paper-scale dimensions (requires the memory of a real mesh)."""
+    if mesh is None:
+        mesh = make_smoke_mesh()
+    cfg = get_config(arch)
+    if not full_scale:
+        cfg = dataclasses.replace(reduced(cfg), num_layers=num_layers)
+    params = init_params(jax.random.key(seed), cfg)
+    return ServeEngine(cfg, params, max_len=max_len, kv_slots=kv_slots,
+                       sample=sample, paged=paged, page_size=page_size,
+                       max_lanes=max_lanes, prefill_chunk=prefill_chunk,
+                       arch_id=arch, mesh=mesh)
 
 
 def warmup(engines: Sequence[ServeEngine], prompt_len: int,
            gen_tokens: int = 2) -> None:
     """Compile prefill + pool decode before timed serving (handles the
-    audio codebook and vision patch frontends)."""
+    audio codebook and vision patch frontends).  Thanks to the shared
+    compiled-step cache, warming one engine per distinct (config, mesh)
+    warms its whole replica group."""
     for e in engines:
         cfg = e.cfg
         shape = ((1, cfg.num_codebooks, prompt_len) if cfg.num_codebooks

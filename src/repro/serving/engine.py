@@ -5,8 +5,8 @@ of two KV memory models:
 
 **Dense slot pool** (fallback, any arch family).  A FIXED pool of
 ``kv_slots`` per-request caches, each ``max_len`` deep.  Each ``step()``
-runs one blocking batch-1 prefill per joining request, then ONE batched
-decode round (a jitted ``vmap`` over the per-slot caches).  Capacity is
+runs one batch-1 prefill per joining request, then ONE batched decode
+round (a jitted ``vmap`` over the per-slot caches).  Capacity is
 ``kv_slots`` concurrent requests, full stop — a 32-token request holds a
 ``max_len``-deep cache hostage for its whole lifetime.
 
@@ -22,22 +22,46 @@ token chunk and then runs one decode round across the lanes that have
 finished prefilling — a long prompt no longer blocks the decode batch,
 it interleaves with it.  Worst-case pages are reserved at admission
 (generation length is deterministic), so admitted requests never
-deadlock waiting for memory.  ``prefill_chunk`` trades time-to-first-
-token for interleaving granularity: smaller chunks give decode lanes
-more frequent turns, larger chunks amortise the per-chunk gather.
+deadlock waiting for memory.
+
+**Overlapped stepping** (the fleet fast path).  ``step()`` is split into
+a non-blocking :meth:`dispatch` — admit, enqueue this round's prefill
+chunks + decode round on the device, and return WITHOUT any host sync —
+and a :meth:`collect` that blocks on the round's results and finalizes
+requests.  A cluster driver dispatches ALL engines before collecting ANY
+(see ``EdgeCluster.step`` / :func:`serve_batch`), so E engines' decode
+rounds execute concurrently on device instead of serializing E host
+round-trips.  ``step() == dispatch(); collect()`` exactly: control flow
+(admission order, slot/lane reuse, finish decisions) is resolved at
+dispatch time from token COUNTS only, so tokens and terminal statuses
+are bit-identical between serial and overlapped stepping.
+
+**Shared compiled steps** (``repro.serving.compiled``).  The jitted
+prefill/decode callables are fetched from a module-level cache keyed on
+(config, shapes, mesh), so same-config engines in a fleet share one
+executable instead of re-jitting per replica, and decode-round states
+are donated (in-place pool update, no per-round copy).
+
+**Sharded big-model engines.**  Pass ``mesh=`` (e.g.
+``launch.mesh.make_smoke_mesh()`` on CPU CI or ``make_production_mesh()``
+on real devices) and the engine places params via
+``launch.sharding.param_shardings`` and its KV pool / recurrent states
+via ``state_pspecs`` on that mesh, running every step inside the
+corresponding :class:`~repro.launch.sharding.ShardingContext` — this is
+how ``mixtral_8x22b`` / ``dbrx_132b`` scale configs serve.
 
 Per-request latency is MEASURED, not modelled: the Request lifecycle
 timestamps (queue / prefill / decode) decompose the serving-side terms of
-the paper's Eqn (2) exactly, replacing the old ``_busy_until`` wall-clock
-queue hack.  The edge-level scheduler (``repro.cluster``) decides WHICH
-engine serves a request; the engine reports its backlog via
+the paper's Eqn (2) exactly.  The edge-level scheduler (``repro.cluster``)
+decides WHICH engine serves a request; the engine reports its backlog via
 ``pending_tokens`` / ``pending_seconds`` (the q_b signal of Eqn 3).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,9 +69,9 @@ import numpy as np
 
 from repro.cluster.request import Request
 from repro.faults.policy import AVAILABILITY, Health
+from repro.launch import sharding as shlib
+from repro.serving import compiled
 from repro.serving.paged_kv import BlockTable, PagePool, cdiv, paged_supported
-from repro.train.steps import (make_decode_step, make_paged_decode_step,
-                               make_paged_prefill_step, make_prefill_step)
 from repro.workload.capability import EngineCapability, cold_token_seconds
 from repro.workload.queueing import EDFQueue
 
@@ -88,6 +112,25 @@ class _Lane:
         return self.chunk_pos >= self.prompt_len
 
 
+@dataclasses.dataclass
+class _Pending:
+    """Device work enqueued by :meth:`ServeEngine.dispatch`, awaiting its
+    :meth:`~ServeEngine.collect`.
+
+    ``prefill`` holds ``(req, tok_device, pos, finished)`` — the deferred
+    first-token of each prompt that completed prefilling this step
+    (``pos`` is the token's index in ``req.tokens``); ``decode`` holds
+    the round's stacked device tokens plus ``(slot/lane, req, pos,
+    finished)`` per active participant.  Finish decisions are structural
+    (token counts), so they are resolved at dispatch time; only VALUES
+    and timestamps wait for the sync."""
+
+    prefill: List[Tuple[Request, jax.Array, int, bool]] = \
+        dataclasses.field(default_factory=list)
+    decode: Optional[Tuple[jax.Array,
+                           List[Tuple[int, Request, int, bool]]]] = None
+
+
 class ServeEngine:
     """Continuous-batching engine for one model replica."""
 
@@ -99,14 +142,22 @@ class ServeEngine:
                  num_pages: Optional[int] = None,
                  max_lanes: Optional[int] = None,
                  prefill_chunk: int = 64,
-                 arch_id: Optional[str] = None):
+                 arch_id: Optional[str] = None,
+                 mesh=None):
         self.cfg = cfg
-        self.params = params
         self.max_len = max_len
         self.kv_slots = kv_slots
         self.sample = sample
         self.arch_id = arch_id or cfg.name
         self._clock = clock
+        # sharded serving: place params on the mesh and run every step
+        # inside its ShardingContext (trace-time constraint annotations)
+        self.mesh = mesh
+        self._ctx = shlib.ShardingContext(mesh) if mesh is not None else None
+        if mesh is not None:
+            params = jax.device_put(params,
+                                    shlib.param_shardings(mesh, params))
+        self.params = params
         # priority/EDF ordering; exact FIFO for requests without QoS
         self._queue = EDFQueue()
         self._zero_tok = np.zeros(
@@ -115,6 +166,9 @@ class ServeEngine:
         self._ewma_tok_s = 0.0         # measured seconds per decode round
         self._next_rid = 0
         self.peak_inflight = 0
+        # overlapped stepping: uncollected device work from dispatch()
+        self._pending: Optional[_Pending] = None
+        self._round_t0 = 0.0           # decode-round enqueue time
         # fault-tolerance state (repro.faults)
         self.health = Health.HEALTHY
         self.fail_reason: Optional[str] = None
@@ -139,18 +193,25 @@ class ServeEngine:
             self._pool = PagePool(num_pages, page_size)
             self._lanes: List[Optional[_Lane]] = [None] * self.max_lanes
             self._paged_states = None   # built lazily on first admission
-            self._paged_prefill = jax.jit(make_paged_prefill_step(cfg))
-            self._paged_decode = jax.jit(make_paged_decode_step(
-                cfg, sample=sample, temperature=temperature))
+            self._paged_prefill = compiled.paged_prefill_step(
+                cfg, num_pages, page_size, mesh=mesh)
+            self._paged_decode = compiled.paged_decode_step(
+                cfg, num_pages, page_size, sample, temperature, mesh=mesh)
         else:
-            self._prefill = jax.jit(make_prefill_step(cfg, max_len=max_len))
-            self._decode1 = make_decode_step(cfg, sample=sample,
-                                             temperature=temperature)
+            self._prefill = compiled.prefill_step(cfg, max_len, mesh=mesh)
             self._slots: List[Optional[Request]] = [None] * kv_slots
             self._last_tok: List[Optional[np.ndarray]] = [None] * kv_slots
             self._pool_states = None   # (slots, ...) stacked per-slot caches
-            self._pool_decode = None
-            self._insert = None
+            self._pool_decode = compiled.pool_decode_step(
+                cfg, kv_slots, sample, temperature, mesh=mesh)
+            self._insert = compiled.pool_insert()
+
+    def _sharded(self):
+        """Context manager activating this engine's mesh rules (no-op for
+        unsharded engines)."""
+        if self._ctx is None:
+            return contextlib.nullcontext()
+        return shlib.use(self._ctx)
 
     # ------------------------------------------------------------------
     # continuous-batching core
@@ -171,29 +232,105 @@ class ServeEngine:
     def step(self) -> List[Request]:
         """One scheduling iteration; returns requests finished this step.
 
+        Exactly ``dispatch()`` followed by ``collect()`` — the serial
+        reference the overlapped cluster path is parity-tested against."""
+        if not self.dispatch():
+            return []
+        return self.collect()
+
+    def dispatch(self) -> bool:
+        """Enqueue one step's device work WITHOUT a host sync.
+
+        Runs admission, this round's prefill chunks, and the decode
+        round, leaving the round's tokens as uncommitted device arrays;
+        :meth:`collect` blocks on them and finalizes requests.  Returns
+        False when the engine is gated off this step (DOWN, stalled, or
+        slowdown-skipped) and no collect is pending.
+
         A DOWN engine is inert.  A DEGRADED engine is either stalled
         (frozen until ``_stall_until``, then self-healing — a transient
         straggler) or slowed (serving one step out of ``_slow_every``
         until an explicit :meth:`recover`)."""
+        if self._pending is not None:
+            raise RuntimeError(
+                "dispatch() with an uncollected step in flight; call "
+                "collect() first")
         if self.health is Health.DOWN:
-            return []
+            return False
         if self.health is Health.DEGRADED:
             now = self._clock()
             if now < self._stall_until:
-                return []
+                return False
             if self._stall_until and self._slow_every <= 1:
                 self.recover()          # stall window elapsed
             else:
                 self._stall_until = 0.0
                 self._step_seq += 1
                 if self._step_seq % self._slow_every:
-                    return []
-        if self.paged:
-            return self._step_paged()
-        return self._step_dense()
+                    return False
+        if not self._queue and not self._inflight_requests():
+            return False               # idle: nothing to enqueue
+        self._pending = (self._dispatch_paged() if self.paged
+                         else self._dispatch_dense())
+        return True
 
-    def _step_dense(self) -> List[Request]:
-        finished = []
+    def collect(self) -> List[Request]:
+        """Sync the dispatched round and finalize requests.
+
+        One host round-trip per engine per step: the round's stacked
+        decode tokens (plus any deferred prefill first-tokens, already
+        computed by then).  Returns the requests that finished this step,
+        prefill-completions first — the same order serial ``step()``
+        produced.  A no-op (empty list) when nothing was dispatched."""
+        if self._pending is None:
+            return []
+        pend, self._pending = self._pending, None
+        finished: List[Request] = []
+
+        # decode sync first: one blocking transfer for the whole round.
+        # _note_round windows from the DISPATCH-time enqueue (t0) to
+        # results-ready here, so the EWMA tok/s times only this engine's
+        # device wait — not the other engines' host loops that ran
+        # between its dispatch and its collect.
+        tok_np = None
+        if pend.decode is not None:
+            tok_all, entries = pend.decode
+            tok_np = np.asarray(tok_all)           # blocks until ready
+            self._note_round(self._round_t0, len(entries))
+
+        # deferred prefill first-tokens (ready by now: they were enqueued
+        # before the decode round)
+        for req, tok_dev, pos, fin in pend.prefill:
+            req.tokens[pos] = np.asarray(tok_dev)
+            req.t_prefill_end = self._clock()
+            if fin:
+                req.finish(req.t_prefill_end)
+                finished.append(req)
+
+        if pend.decode is not None:
+            now = self._clock()
+            for i, req, pos, fin in entries:
+                tk = tok_np[i] if not self.paged else tok_np[i:i + 1]
+                req.tokens[pos] = tk
+                if fin:
+                    req.finish(now)
+                    finished.append(req)
+                elif self.paged:
+                    self._lanes[i].last_tok = tk
+                else:
+                    self._last_tok[i] = tk
+        return finished
+
+    @property
+    def pending_collect(self) -> bool:
+        """True between a dispatch() and its collect()."""
+        return self._pending is not None
+
+    def _dispatch_dense(self) -> _Pending:
+        pend = _Pending()
+        # admission: every joining request's prefill is ENQUEUED here but
+        # its first-token sync is deferred to collect() — K admissions
+        # cost one deferred round-trip, not K blocking ones
         free = [i for i, r in enumerate(self._slots) if r is None]
         while free and self._queue:
             req = self._queue.popleft()
@@ -202,50 +339,52 @@ class ServeEngine:
             batch = {"tokens": req.prompt}
             if req.patches is not None:
                 batch["patches"] = req.patches
-            logits, st = self._prefill(self.params, batch)
-            tok = np.asarray(self._pick(logits))
-            req.t_prefill_end = self._clock()
+            with self._sharded():
+                logits, st = self._prefill(self.params, batch)
+                tok = self._pick(logits)           # device; sync deferred
+            pos = len(req.tokens)
             req.tokens.append(tok)
             if len(req.tokens) >= req.max_new_tokens:
-                req.finish(req.t_prefill_end)
-                finished.append(req)
+                pend.prefill.append((req, tok, pos, True))
                 free.insert(0, i)
                 continue
+            pend.prefill.append((req, tok, pos, False))
             self._ensure_pool(st)
-            self._pool_states = self._insert(self._pool_states, st,
-                                             jnp.int32(i))
+            with self._sharded():
+                self._pool_states = self._insert(self._pool_states, st,
+                                                 jnp.int32(i))
             self._slots[i] = req
             self._last_tok[i] = tok
         self._note_inflight(sum(r is not None for r in self._slots))
 
         active = [i for i, r in enumerate(self._slots) if r is not None]
         if active:
-            toks = np.stack([t if t is not None else self._zero_tok
-                             for t in self._last_tok])
+            toks = jnp.stack([jnp.asarray(t if t is not None
+                                          else self._zero_tok, jnp.int32)
+                              for t in self._last_tok])
             keys = jax.random.split(self._next_key(), self.kv_slots)
-            t0 = self._clock()
-            tok_all, self._pool_states = self._pool_decode(
-                self.params, jnp.asarray(toks[..., None], jnp.int32),
-                self._pool_states, keys)
-            tok_all = np.asarray(tok_all)          # blocks until ready
-            self._note_round(t0, len(active))
-            now = self._clock()
+            self._round_t0 = self._clock()
+            with self._sharded():
+                tok_all, self._pool_states = self._pool_decode(
+                    self.params, toks[..., None], self._pool_states, keys)
+            entries = []
             for i in active:
                 req = self._slots[i]
-                tk = tok_all[i]
-                req.tokens.append(tk)
-                self._last_tok[i] = tk
-                if len(req.tokens) >= req.max_new_tokens:
-                    req.finish(now)
-                    finished.append(req)
+                pos = len(req.tokens)
+                req.tokens.append(tok_all[i])      # device slice, lazy
+                self._last_tok[i] = tok_all[i]
+                fin = len(req.tokens) >= req.max_new_tokens
+                entries.append((i, req, pos, fin))
+                if fin:
                     self._slots[i] = None
-        return finished
+            pend.decode = (tok_all, entries)
+        return pend
 
     # ------------------------------------------------------------------
     # paged step: page-gated admission, chunked prefill, decode round
     # ------------------------------------------------------------------
-    def _step_paged(self) -> List[Request]:
-        finished = []
+    def _dispatch_paged(self) -> _Pending:
+        pend = _Pending()
         # 1. admission — head-of-line, gated on free pages (worst case
         # reserved up front) and a free lane.  The queue drains in
         # priority/EDF order (exact FIFO without QoS classes); no
@@ -269,7 +408,8 @@ class ServeEngine:
                                    prompt_len=self._prompt_len(req))
         self._note_inflight(sum(ln is not None for ln in self._lanes))
 
-        # 2. one prefill chunk per still-prefilling lane
+        # 2. one prefill chunk per still-prefilling lane (device enqueue
+        # only; last-chunk first-tokens sync in collect())
         self._ensure_paged_states()
         C = self.prefill_chunk
         for i, lane in enumerate(self._lanes):
@@ -285,22 +425,25 @@ class ServeEngine:
                 widths = [(0, 0)] * (chunk.ndim - 1) + [(0, pad)]
                 chunk = np.pad(chunk, widths)
             row = jnp.asarray(lane.table.row(self._row_width), jnp.int32)
-            logits, self._paged_states = self._paged_prefill(
-                self.params,
-                {"tokens": jnp.asarray(chunk, jnp.int32),
-                 "start": jnp.asarray(c0, jnp.int32), "block_table": row},
-                self._paged_states)
+            with self._sharded():
+                logits, self._paged_states = self._paged_prefill(
+                    self.params,
+                    {"tokens": jnp.asarray(chunk, jnp.int32),
+                     "start": jnp.asarray(c0, jnp.int32),
+                     "block_table": row},
+                    self._paged_states)
             lane.chunk_pos = c0 + C
             lane.length = min(lane.chunk_pos, lane.prompt_len)
             if lane.decoding:                      # last chunk of prompt
                 last = lane.prompt_len - 1 - c0
-                tok = np.asarray(self._pick(logits[0, last][None]))
-                req.t_prefill_end = self._clock()
+                with self._sharded():
+                    tok = self._pick(logits[0, last][None])
+                pos = len(req.tokens)
                 req.tokens.append(tok)
                 lane.last_tok = tok
-                if len(req.tokens) >= req.max_new_tokens:
-                    req.finish(req.t_prefill_end)
-                    finished.append(req)
+                fin = len(req.tokens) >= req.max_new_tokens
+                pend.prefill.append((req, tok, pos, fin))
+                if fin:
                     self._free_lane(i)
 
         # 3. one decode round across the lanes that finished prefilling;
@@ -309,40 +452,42 @@ class ServeEngine:
                   if ln is not None and ln.decoding]
         if active:
             L, W = self.max_lanes, self._row_width
-            toks = np.zeros((L,) + self._zero_tok.shape, np.int32)
+            rows = [self._zero_tok] * L
             tables = np.zeros((L, W), np.int32)
             lengths = np.zeros((L,), np.int32)
             for i in active:
                 lane = self._lanes[i]
-                toks[i] = lane.last_tok
+                rows[i] = lane.last_tok        # may be a device array
                 tables[i] = lane.table.row(W)
                 lengths[i] = lane.length
+            toks = jnp.stack([jnp.asarray(r, jnp.int32) for r in rows])
             if self.cfg.num_codebooks:
-                tok_in = toks.transpose(0, 2, 1)   # (L,1,K) -> (L,K,1)
+                tok_in = jnp.transpose(toks, (0, 2, 1))  # (L,1,K)->(L,K,1)
             else:
                 tok_in = toks                      # (L,1)
-            t0 = self._clock()
-            _, tok_all, self._paged_states = self._paged_decode(
-                self.params,
-                {"tokens": jnp.asarray(tok_in, jnp.int32),
-                 "block_tables": jnp.asarray(tables, jnp.int32),
-                 "lengths": jnp.asarray(lengths, jnp.int32)},
-                self._paged_states, self._next_key())
-            tok_np = np.asarray(tok_all)           # blocks until ready
-            self._note_round(t0, len(active))
-            now = self._clock()
+            self._round_t0 = self._clock()
+            with self._sharded():
+                _, tok_all, self._paged_states = self._paged_decode(
+                    self.params,
+                    {"tokens": tok_in,
+                     "block_tables": jnp.asarray(tables, jnp.int32),
+                     "lengths": jnp.asarray(lengths, jnp.int32)},
+                    self._paged_states, self._next_key())
+            entries = []
             for i in active:
                 lane = self._lanes[i]
                 req = lane.req
-                tk = tok_np[i:i + 1]               # (1,) or (1, K)
+                tk = tok_all[i:i + 1]              # device slice, lazy
+                pos = len(req.tokens)
                 req.tokens.append(tk)
                 lane.last_tok = tk
                 lane.length += 1                   # decode wrote one KV
-                if len(req.tokens) >= req.max_new_tokens:
-                    req.finish(now)
-                    finished.append(req)
+                fin = len(req.tokens) >= req.max_new_tokens
+                entries.append((i, req, pos, fin))
+                if fin:
                     self._free_lane(i)
-        return finished
+            pend.decode = (tok_all, entries)
+        return pend
 
     def run_to_completion(self, max_steps: int = 1_000_000) -> List[Request]:
         """Step until queue and slots drain; returns finished requests."""
@@ -364,6 +509,7 @@ class ServeEngine:
         self._ewma_tok_s = 0.0
         self._next_rid = 0
         self.peak_inflight = 0
+        self._pending = None
         self.health = Health.HEALTHY
         self.fail_reason = None
         self._stall_until = 0.0
@@ -385,9 +531,17 @@ class ServeEngine:
 
         Returns the orphaned requests (queued first, then in-flight) so
         the cluster can re-offload them; their per-attempt state is NOT
-        reset here — recovery policy belongs to the caller."""
+        reset here — recovery policy belongs to the caller.  An
+        uncollected dispatch is dropped: requests that finished inside it
+        are orphaned too (their un-synced tokens are discarded on
+        retry)."""
         orphans: List[Request] = list(self._queue)
         self._queue.clear()
+        if self._pending is not None:
+            pend, self._pending = self._pending, None
+            orphans += [req for req, _, _, fin in pend.prefill if fin]
+            if pend.decode is not None:
+                orphans += [req for _, req, _, fin in pend.decode[1] if fin]
         if self.paged:
             for i, lane in enumerate(self._lanes):
                 if lane is not None:
@@ -460,7 +614,8 @@ class ServeEngine:
 
     @property
     def has_work(self) -> bool:
-        return bool(self._queue) or bool(self._inflight_requests())
+        return (bool(self._queue) or bool(self._inflight_requests())
+                or self._pending is not None)
 
     @property
     def pending_tokens(self) -> int:
@@ -547,7 +702,13 @@ class ServeEngine:
 
     def _note_round(self, t0: float, active: int) -> None:
         # a round advances every active lane one token, so the per-token
-        # drain rate is round time / active lanes
+        # drain rate is round time / active lanes.  t0 is stamped at
+        # DISPATCH (device enqueue) and the sync lands in collect(), so
+        # this windows exactly one engine's enqueue-to-ready device wait;
+        # a whole-cluster-step window would absorb the other engines'
+        # compute under overlapped stepping and corrupt the capability
+        # descriptor's f_b' (and with it the deadline-aware scheduler's
+        # affinity features).
         dt = (self._clock() - t0) / active
         self._ewma_tok_s = (0.7 * self._ewma_tok_s + 0.3 * dt
                             if self._ewma_tok_s else dt)
@@ -562,40 +723,39 @@ class ServeEngine:
     def _ensure_paged_states(self) -> None:
         if self._paged_states is None:
             from repro.models.transformer import init_paged_states
-            self._paged_states = init_paged_states(
-                self.cfg, self.num_pages, self.page_size)
+            states = init_paged_states(self.cfg, self.num_pages,
+                                       self.page_size)
+            self._paged_states = self._place_states(states)
 
     def _ensure_pool(self, st):
-        """Lazily build the slot pool + jitted batched decode from the
-        structure of the first prefill's cache (covers every arch family:
-        attention ring buffers, quantised caches, recurrent states)."""
+        """Lazily build the slot pool from the structure of the first
+        prefill's cache (covers every arch family: attention ring
+        buffers, quantised caches, recurrent states)."""
         if self._pool_states is not None:
             return
         slots = self.kv_slots
-        self._pool_states = jax.tree_util.tree_map(
+        pool = jax.tree_util.tree_map(
             lambda leaf: jnp.zeros((slots,) + leaf.shape, leaf.dtype), st)
-        self._insert = jax.jit(lambda pool, s, i: jax.tree_util.tree_map(
-            lambda p_, s_: p_.at[i].set(s_), pool, s))
-        dec, sample = self._decode1, self.sample
+        self._pool_states = self._place_states(pool)
 
-        def pool_step(params, toks, states, keys):
-            def one(tk, st_, k):
-                if sample:
-                    _, tok, ns = dec(params, {"tokens": tk}, st_, rng=k)
-                else:
-                    _, tok, ns = dec(params, {"tokens": tk}, st_)
-                return tok, ns
-
-            return jax.vmap(one)(toks, states, keys)
-
-        self._pool_decode = jax.jit(pool_step)
+    def _place_states(self, states):
+        """Shard KV / recurrent state onto the engine's mesh (identity
+        when unsharded); divisibility-guarded per leaf."""
+        if self.mesh is None:
+            return states
+        shardings = shlib.state_shardings(self.mesh, states)
+        return jax.device_put(states, shardings)
 
 
 def serve_batch(engines: List[ServeEngine], assignments: List[int],
                 prompts: List[jnp.ndarray], num_tokens: int
                 ) -> List[RequestResult]:
     """Route each prompt to its assigned engine, serve them concurrently
-    (continuous batching within each engine), return per-request results."""
+    (continuous batching within each engine), return per-request results.
+
+    Overlapped stepping: every busy engine's round is DISPATCHED before
+    any engine's results are collected, so E engines' decode rounds run
+    concurrently on device instead of paying E serial host syncs."""
     reqs = []
     for i, pr in enumerate(prompts):
         # prompts arrive unbatched — (S,) text or (K, S) audio — and gain
@@ -605,9 +765,11 @@ def serve_batch(engines: List[ServeEngine], assignments: List[int],
         reqs.append(req)
         engines[assignments[i]].admit(req)
     while any(e.has_work for e in engines):
-        for e in engines:
-            if e.has_work:      # an idle engine's step() is not free:
-                e.step()        # it still pays host-side bookkeeping
+        busy = [e for e in engines if e.has_work]
+        for e in busy:          # an idle engine's step is not free: it
+            e.dispatch()        # still pays host-side bookkeeping
+        for e in busy:
+            e.collect()
     return [RequestResult(tokens=r.tokens, prefill_s=r.prefill_s,
                           decode_s=r.decode_s, queue_s=r.queue_s)
             for r in reqs]

@@ -271,7 +271,10 @@ def test_cluster_quarantines_throwing_engine(monkeypatch):
     def explode():
         raise RuntimeError("synthetic engine fault")
 
+    # the overlapped cluster path enters through dispatch(); the serial
+    # fallback through step() — explode both
     monkeypatch.setattr(engines[0], "step", explode)
+    monkeypatch.setattr(engines[0], "dispatch", explode)
     trace = poisson_trace(6, rate=200.0, prompt_len=8, max_new_tokens=3,
                           vocab_size=vocab, num_origins=2, seed=2)
     done = cluster.run(trace)

@@ -63,6 +63,39 @@ def test_state_specs():
     assert spec == P("data", None)
 
 
+def test_state_specs_divisibility_guard():
+    """An axis that doesn't divide the dim must replicate that dim, not
+    emit an uneven NamedSharding (e.g. a 6-lane pool on 4-way 'data')."""
+    sizes = {"data": 4, "model": 16}
+    # 6 lanes % 4 != 0 -> batch dim replicated; kv_seq 32768 % 16 == 0
+    spec = shlib._state_leaf_spec(("scan", "k"), (12, 6, 8, 32768, 128),
+                                  "data", sizes)
+    assert spec == P(None, None, None, "model", None)
+    # seq dim indivisible by 'model' -> replicated, batch still sharded
+    spec = shlib._state_leaf_spec(("scan", "k"), (12, 8, 8, 100, 128),
+                                  "data", sizes)
+    assert spec == P(None, "data", None, None, None)
+    # tuple batch axes multiply: ('pod','data') = 8 doesn't divide 6
+    spec = shlib._state_leaf_spec(("flat", "h"), (6, 1024),
+                                  ("pod", "data"),
+                                  {"pod": 2, "data": 4})
+    assert spec == P(None, None)
+
+
+def test_state_shardings_on_smoke_mesh():
+    """state_shardings builds NamedShardings for every leaf on the mesh."""
+    from jax.sharding import NamedSharding
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    states = {"k": jnp.zeros((2, 4, 16, 8)), "pos": jnp.zeros(())}
+    shardings = shlib.state_shardings(mesh, states)
+    for leaf in jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: isinstance(x, NamedSharding)):
+        assert isinstance(leaf, NamedSharding)
+        assert leaf.mesh == mesh
+    placed = jax.device_put(states, shardings)   # shapes must be legal
+    assert placed["k"].shape == (2, 4, 16, 8)
+
+
 def test_param_pspecs_cover_full_tree():
     from repro.configs import get_config, reduced
     from repro.models import init_params
