@@ -119,10 +119,12 @@ def bench_closed_loop(scale: str = "quick", n_edge: int = 4,
                       num_requests: int = 24, rate: float = 96.0,
                       prompt_len: int = 32, gen_tokens: int = 8,
                       seed: int = 0, kv_slots: int = 2,
-                      prefill_chunk: int = 16):
+                      prefill_chunk: int = 16, page_size: int = 8,
+                      prefix_len: int = -1, prefix_frac: float = 0.75):
     """Closed loop: train LAD-TS in the QoS-enabled sim, then replay one
     mixed-class Poisson trace through a HETEROGENEOUS live fleet under
-    the paper policy and each baseline (including deadline-aware).
+    the paper policy and each baseline (including deadline-aware and the
+    cache-aware prefix-affinity router).
 
     The fleet cycles ``FLEET_ARCHS`` over the edge servers, so paged
     attention engines and dense-slot xLSTM engines serve side by side;
@@ -132,8 +134,18 @@ def bench_closed_loop(scale: str = "quick", n_edge: int = 4,
     breakdown (p50/p95/p99, deadline-miss rate, priority-weighted
     goodput).
 
+    The trace is a shared-system-prompt mix: ``prefix_frac`` of requests
+    open with one common seeded prefix (``prefix_len`` tokens, default
+    3/4 of the prompt; truncated per class to its own prompt length), so
+    paged engines with prefix caching serve most repeat prompts without
+    re-prefilling — records report ``prefill_tokens_saved`` and
+    ``prefix_hit_rate`` per scheduler.  Pass ``prefix_len=0`` for the
+    legacy prefix-free trace (bit-identical behavior).
+
     Returns (csv_rows, json_records)."""
     paper = scale == "paper"
+    if prefix_len < 0:
+        prefix_len = (3 * prompt_len) // 4
     # per-class prompt lengths: interactive half-length, batch double —
     # the live fleet sees a mixed prompt-length distribution (the sim's
     # d_n spread already models it); max_len=3*(prompt+gen) below covers
@@ -155,6 +167,8 @@ def bench_closed_loop(scale: str = "quick", n_edge: int = 4,
                                       num_engines=n_edge,
                                       n_max=p.max_tasks),
             "deadline": make_scheduler("deadline", n_edge),
+            "prefix-affinity": make_scheduler("prefix-affinity", n_edge,
+                                              qos=True),
             "jsq": make_scheduler("jsq", n_edge),
             "round-robin": make_scheduler("round-robin", n_edge),
             "random": make_scheduler("random", n_edge),
@@ -168,6 +182,8 @@ def bench_closed_loop(scale: str = "quick", n_edge: int = 4,
     rows, records = [], []
     # --- same Scheduler interface against the core.env simulator ----------
     for name, s in scheds().items():
+        if getattr(s, "prefix_obs", False):
+            continue   # the slot-based sim has no KV model to be warm in
         t0 = time.monotonic()
         r = evaluate_scheduler(s, p, episodes=2, key=jax.random.key(1))
         r.pop("carry", None)   # agent pytree, not JSON material
@@ -189,20 +205,23 @@ def bench_closed_loop(scale: str = "quick", n_edge: int = 4,
                           depths=[2 + (i % 2) for i in range(n_edge)],
                           seed0=1, kv_slots=kv_slots,
                           prefill_chunk=prefill_chunk,
+                          page_size=page_size,
                           max_lanes=4 * kv_slots)
     # one trace must tokenize for every engine in the mixed fleet
     vocab = min(e.cfg.vocab_size for e in engines)
     warmup(engines, prompt_len)
     for name, s in scheds().items():
         for e in engines:
-            e.reset()
+            e.reset()             # also clears each prefix cache: every
+        # scheduler starts COLD, so hit rates compare placement quality
         cluster = EdgeCluster(engines, s, seed=seed, qos_obs=True)
         trace = poisson_trace(num_requests, rate=rate,
                               prompt_len=prompt_len,
                               max_new_tokens=gen_tokens,
                               vocab_size=vocab,
                               num_origins=n_edge, seed=seed + 1,
-                              qos_mix=mix)
+                              qos_mix=mix, prefix_len=prefix_len,
+                              prefix_frac=prefix_frac)
         t0 = time.monotonic()
         stats = summarize(cluster.run(trace))
         wall = time.monotonic() - t0
@@ -213,7 +232,9 @@ def bench_closed_loop(scale: str = "quick", n_edge: int = 4,
                     f"p50={stats['p50_s']:.3f}s;"
                     f"p95={stats['p95_s']:.3f}s;"
                     f"p99={stats['p99_s']:.3f}s;"
-                    f"peak_inflight={peak}" + qos_suffix(stats))
+                    f"peak_inflight={peak}" + qos_suffix(stats)
+                    + f";saved={stats['prefill_tokens_saved']}"
+                    f";hit={stats['prefix_hit_rate']:.2f}")
         records.append({
             "bench": "closedloop_live", "scheduler": name,
             "wall_s": wall,
@@ -223,7 +244,17 @@ def bench_closed_loop(scale: str = "quick", n_edge: int = 4,
             "kv_slots": kv_slots,
             "prefill_chunk": prefill_chunk,
             "prompt_len": prompt_len,
+            "page_size": page_size,
+            "prefix_len": prefix_len,
+            "prefix_frac": prefix_frac,
             "peak_inflight": peak,
+            "engine_prefill_tokens_saved": [int(e.prefill_tokens_saved)
+                                            for e in engines],
+            "engine_prefix_hit_rate": [float(e.prefix_hit_rate)
+                                       for e in engines],
+            "cow_forks": int(sum(e.cow_forks for e in engines)),
+            "prefix_evictions": int(sum(e.prefix_evictions
+                                        for e in engines)),
             **stats})
     return rows, records
 

@@ -81,7 +81,7 @@ def run_stage(engines, scheduler_name: str, *, rate: float,
     for e in engines:
         e.reset()
     sched = (make_scheduler(scheduler_name, E, qos=True)
-             if scheduler_name == "failure-aware"
+             if scheduler_name in ("failure-aware", "prefix-affinity")
              else make_scheduler(scheduler_name, E))
     cluster = EdgeCluster(engines, sched, seed=seed, qos_obs=True,
                           overlap=overlap, retry=RetryPolicy())
@@ -103,7 +103,9 @@ def run_stage(engines, scheduler_name: str, *, rate: float,
         **{k: stats[k] for k in ("count", "completed", "abandoned",
                                  "failed", "p50_s", "p95_s", "p99_s",
                                  "mean_s", "deadline_miss_rate",
-                                 "weighted_goodput")},
+                                 "weighted_goodput",
+                                 "prefill_tokens_saved",
+                                 "prefix_hit_rate")},
     }
 
 

@@ -15,6 +15,7 @@ from repro.cluster.schedulers import (BASELINES, DeadlineAwareScheduler,
                                       FailureAwareScheduler,
                                       JoinShortestQueueScheduler,
                                       LocalOnlyScheduler, PolicyScheduler,
+                                      PrefixAffinityScheduler,
                                       RandomScheduler, RoundRobinScheduler,
                                       Scheduler, make_scheduler)
 from repro.cluster.simulate import build_sim_episode, evaluate_scheduler
@@ -22,7 +23,8 @@ from repro.cluster.simulate import build_sim_episode, evaluate_scheduler
 __all__ = [
     "BASELINES", "DeadlineAwareScheduler", "EdgeCluster",
     "FailureAwareScheduler", "JoinShortestQueueScheduler", "LiveObsConfig",
-    "LocalOnlyScheduler", "PolicyScheduler", "RandomScheduler", "Request",
+    "LocalOnlyScheduler", "PolicyScheduler", "PrefixAffinityScheduler",
+    "RandomScheduler", "Request",
     "RoundRobinScheduler", "Scheduler", "build_sim_episode",
     "evaluate_scheduler", "make_scheduler", "poisson_trace", "summarize",
 ]

@@ -63,6 +63,8 @@ class LiveObsConfig:
     slack_cap: float = 16.0    # best-effort requests report this slack
     c_scale: float = 1.0       # expected decode seconds on an engine
     pref_penalty: float = 4.0  # affinity inflation off the preferred arch
+    # prefix-extended feature
+    hit_scale: float = 32.0    # expected reusable prompt tokens per engine
 
 
 class EdgeCluster:
@@ -76,6 +78,7 @@ class EdgeCluster:
                                None] = None,
                  retry: Optional[RetryPolicy] = None,
                  fault_obs: Optional[bool] = None,
+                 prefix_obs: Optional[bool] = None,
                  overlap: bool = True):
         self.overlap = bool(overlap)
         if scheduler.num_engines != len(engines):
@@ -104,30 +107,41 @@ class EdgeCluster:
                             "orphaned": 0, "retries": 0, "failed": 0,
                             "abandoned": 0, "orphan_recovery_s": []}
 
-        # observation width: 2x2 combinations of (QoS, fault) features ---
+        # observation width: (QoS, fault) feature combinations, plus an
+        # optional per-engine expected-prefix-hit block appended LAST
+        # (declared by the scheduler's ``prefix_obs`` class attribute)
         base_dim, qos_dim = 2 + E, 3 + 2 * E
         sched_dim = getattr(scheduler, "state_dim", None)
+        if prefix_obs is None:
+            prefix_obs = bool(getattr(scheduler, "prefix_obs", False))
+        self.prefix_obs = bool(prefix_obs)
+        # infer the QoS/fault layout from the width NET of the prefix block
+        eff_dim = (sched_dim - E if (sched_dim is not None
+                                     and self.prefix_obs) else sched_dim)
         if qos_obs is None:
-            qos_obs = sched_dim in (qos_dim, qos_dim + E)
+            qos_obs = eff_dim in (qos_dim, qos_dim + E)
         self.qos_obs = bool(qos_obs)
         if fault_obs is None:
-            fault_obs = (sched_dim in (base_dim + E, qos_dim + E)
-                         if sched_dim is not None
+            fault_obs = (eff_dim in (base_dim + E, qos_dim + E)
+                         if eff_dim is not None
                          else self.injector is not None)
         self.fault_obs = bool(fault_obs)
         self.obs_dim = ((qos_dim if self.qos_obs else base_dim)
-                        + (E if self.fault_obs else 0))
+                        + (E if self.fault_obs else 0)
+                        + (E if self.prefix_obs else 0))
         if sched_dim is not None and sched_dim != self.obs_dim:
             raise ValueError(
                 f"scheduler {scheduler.name!r} expects state_dim="
                 f"{sched_dim}, but this {E}-engine cluster produces "
                 f"{self.obs_dim}-feature observations "
                 f"({'QoS-extended 3+2E' if self.qos_obs else 'base 2+E'}"
-                f"{' + E availability' if self.fault_obs else ''}; "
+                f"{' + E availability' if self.fault_obs else ''}"
+                f"{' + E prefix-hit' if self.prefix_obs else ''}; "
                 f"base={base_dim}, extended={qos_dim}, +faults adds "
-                f"{E}).  Train the policy on an EnvParams with num_bs={E} "
-                f"and matching qos_mix / fault settings, or pass qos_obs= "
-                f"/ fault_obs= explicitly.")
+                f"{E}, +prefix adds {E}).  Train the policy on an "
+                f"EnvParams with num_bs={E} and matching qos_mix / fault "
+                f"settings, or pass qos_obs= / fault_obs= / prefix_obs= "
+                f"explicitly.")
         self.carry = scheduler.init_carry()
         self._key = jax.random.key(seed)
         self._count = 0
@@ -164,6 +178,14 @@ class EdgeCluster:
         if self.fault_obs:
             cols.append(np.asarray([e.availability for e in self.engines],
                                    np.float32))
+        if self.prefix_obs:
+            # expected reusable prompt tokens per engine RIGHT NOW — a
+            # pure peek against each engine's prefix index; dense /
+            # cache-off engines report 0
+            hit = np.asarray(
+                [getattr(e, "expected_prefix_tokens", lambda r: 0)(req)
+                 for e in self.engines], np.float32)
+            cols.append(hit / self.obs.hit_scale)
         # NaN-guard: a crashed engine mid-measurement must never poison
         # the policy input (inf backlog estimates, NaN EWMA rates)
         row = np.nan_to_num(np.concatenate(cols), nan=0.0,

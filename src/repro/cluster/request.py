@@ -60,6 +60,10 @@ class Request:                     # would compare prompt arrays
 
     engine_id: Optional[int] = None
     tokens: List[np.ndarray] = dataclasses.field(default_factory=list)
+    # prefix caching (repro.serving.paged_kv): prompt tokens whose KV was
+    # reused from the engine's prefix cache on the SERVING attempt —
+    # prefill compute the request never paid
+    prefix_tokens: int = 0
 
     # ------------------------------------------------------------------
     @property
@@ -131,6 +135,7 @@ class Request:                     # would compare prompt arrays
         self.t_finish = None
         self.engine_id = None
         self.missed = None
+        self.prefix_tokens = 0
 
     def give_up(self, status: str, reason: str) -> None:
         """Terminal failure: ``failed`` (retries exhausted) or
@@ -146,7 +151,8 @@ def poisson_trace(num_requests: int, rate: float, prompt_len: int,
                   max_new_tokens: int, vocab_size: int, *,
                   num_origins: int = 1, min_new_tokens: int = 1,
                   num_codebooks: int = 0, seed: int = 0,
-                  qos_mix: Optional[Sequence[Tuple[Any, float]]] = None
+                  qos_mix: Optional[Sequence[Tuple[Any, float]]] = None,
+                  prefix_len: int = 0, prefix_frac: float = 0.0
                   ) -> List[Request]:
     """Poisson arrival trace with heterogeneous decode demand.
 
@@ -164,6 +170,15 @@ def poisson_trace(num_requests: int, rate: float, prompt_len: int,
     ``prompt_len`` overrides the trace-level prompt length (mixed
     prompt-length distributions).  Sampling is driven by the same seeded
     generator, so a trace is fully deterministic given ``seed``.
+
+    With ``prefix_len > 0`` and ``prefix_frac > 0``, a deterministic
+    fraction of requests share one seeded "system prompt": their first
+    ``min(prefix_len, plen)`` tokens are replaced by a common prefix
+    drawn once per trace — the shared-prefix workload that prefix-cached
+    engines can serve without re-prefilling.  With the defaults
+    (``prefix_len=0``) the generator consumes the exact same random
+    stream as before, so prefix-free traces are bit-identical to
+    pre-prefix behavior.
     """
     import jax
     import jax.numpy as jnp
@@ -176,6 +191,12 @@ def poisson_trace(num_requests: int, rate: float, prompt_len: int,
         if w.sum() <= 0:
             raise ValueError("qos_mix weights must sum to a positive value")
         probs = w / w.sum()
+    shared = None
+    if prefix_len > 0 and prefix_frac > 0:
+        pshape = ((1, num_codebooks, prefix_len) if num_codebooks
+                  else (1, prefix_len))
+        shared = jax.random.randint(jax.random.key(seed * 77_003 + 13),
+                                    pshape, 0, vocab_size, jnp.int32)
     t = 0.0
     reqs = []
     for r in range(num_requests):
@@ -199,6 +220,10 @@ def poisson_trace(num_requests: int, rate: float, prompt_len: int,
                  else (1, plen))
         prompt = jax.random.randint(jax.random.key(seed * 100_003 + r),
                                     shape, 0, vocab_size, jnp.int32)
+        if shared is not None and rng.random() < prefix_frac:
+            L = min(prefix_len, plen)
+            prompt = jnp.concatenate(
+                [shared[..., :L], prompt[..., L:]], axis=-1)
         reqs.append(Request(
             rid=r, prompt=prompt,
             max_new_tokens=new_tokens,
@@ -277,6 +302,15 @@ def summarize(requests: Sequence[Request]) -> dict:
            **_status_stats(reqs),
            **_delay_stats(delays)}
 
+    # prefix-cache efficiency: prompt tokens whose prefill was skipped
+    # (cache hit) and the fraction of served requests that hit at all —
+    # schedulers are compared on cache efficiency, not just delay
+    out["prefill_tokens_saved"] = int(
+        sum(getattr(r, "prefix_tokens", 0) or 0 for r in reqs))
+    out["prefix_hit_rate"] = (
+        sum(1 for r in done if getattr(r, "prefix_tokens", 0)) / len(done)
+        if done else 0.0)
+
     with_deadline = [r for r in reqs if r.deadline_s is not None]
     misses = [r for r in with_deadline if _is_missed(r)]
     out["deadline_miss_rate"] = (len(misses) / len(with_deadline)
@@ -310,6 +344,12 @@ def summarize(requests: Sequence[Request]) -> dict:
                     sum(_is_missed(r) for r in sub_dl) / len(sub_dl)
                     if sub_dl else 0.0),
                 "weighted_goodput": (sub_good / sub_w) if sub_w else 0.0,
+                "prefill_tokens_saved": int(
+                    sum(getattr(r, "prefix_tokens", 0) or 0 for r in sub)),
+                "prefix_hit_rate": (
+                    sum(1 for r in sub_done
+                        if getattr(r, "prefix_tokens", 0)) / len(sub_done)
+                    if sub_done else 0.0),
             }
         out["classes"] = classes
     return out

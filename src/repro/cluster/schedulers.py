@@ -178,6 +178,54 @@ class FailureAwareScheduler(Scheduler):
         return jnp.argmin(cost, axis=-1).astype(jnp.int32), carry
 
 
+class PrefixAffinityScheduler(Scheduler):
+    """Cache-aware placement: route where the prompt's KV already lives.
+
+    Declares ``prefix_obs = True``, so ``EdgeCluster.observe`` appends a
+    trailing per-engine block of EXPECTED PREFIX HITS — how many of this
+    request's prompt tokens each engine could serve straight from its
+    prefix cache (a pure peek; dense engines report 0).  Placement then
+    minimises backlog minus a cache credit::
+
+        cost_e = q_e [+ c_e with qos=True] - hit_weight * hit_e
+
+    i.e. earliest-expected-completion where compute ALREADY DONE at an
+    engine counts as negative work — the paper's "finish fastest" rule
+    once resident state is part of an engine's effective speed.  The
+    credit concentrates same-prefix requests on warm engines (raising
+    their hit rate further), while the backlog term keeps a hot prefix
+    from melting one engine.  With ``fault=True`` the availability
+    columns (just before the hit block) mask DOWN engines exactly like
+    ``failure-aware``.
+    """
+
+    name = "prefix-affinity"
+    prefix_obs = True
+
+    def __init__(self, num_engines: int, qos: bool = False,
+                 fault: bool = False, hit_weight: float = 0.5):
+        super().__init__(num_engines)
+        self.qos = bool(qos)
+        self.fault = bool(fault)
+        self.hit_weight = float(hit_weight)
+        base = 3 + 2 * num_engines if self.qos else 2 + num_engines
+        self.state_dim = (base + (num_engines if self.fault else 0)
+                          + num_engines)
+
+    def select(self, carry, s, n, key):
+        E = self.num_engines
+        cost = s[:, 2:2 + E]
+        if self.qos:
+            cost = cost + s[:, 3 + E:3 + 2 * E]
+        hit = s[:, -E:]
+        if self.fault:
+            avail = s[:, -2 * E:-E]
+            cost = cost / jnp.maximum(avail, 0.5)
+            cost = jnp.where(avail > 0.25, cost, jnp.inf)
+        cost = cost - self.hit_weight * hit
+        return jnp.argmin(cost, axis=-1).astype(jnp.int32), carry
+
+
 def _infer_state_dim(states) -> Optional[int]:
     """Observation width a stacked agent pytree was trained on (the
     second-to-last axis of the first critic/Q layer's weights)."""
@@ -241,13 +289,15 @@ class PolicyScheduler(Scheduler):
 
 
 BASELINES = ("round-robin", "jsq", "random", "local", "deadline",
-             "failure-aware")
+             "failure-aware", "prefix-affinity")
 
 
 def make_scheduler(name: str, num_engines: int, **policy_kwargs) -> Scheduler:
     """Factory: baseline by name, or a learned method given agent states.
 
-    ``failure-aware`` accepts ``qos=True`` to read the QoS-extended row.
+    ``failure-aware`` accepts ``qos=True`` to read the QoS-extended row;
+    ``prefix-affinity`` additionally accepts ``fault=True`` and
+    ``hit_weight=`` (cache-credit strength).
     """
     if name == "round-robin":
         return RoundRobinScheduler(num_engines)
@@ -262,6 +312,11 @@ def make_scheduler(name: str, num_engines: int, **policy_kwargs) -> Scheduler:
     if name == "failure-aware":
         return FailureAwareScheduler(num_engines,
                                      qos=policy_kwargs.pop("qos", False))
+    if name == "prefix-affinity":
+        return PrefixAffinityScheduler(
+            num_engines, qos=policy_kwargs.pop("qos", False),
+            fault=policy_kwargs.pop("fault", False),
+            hit_weight=policy_kwargs.pop("hit_weight", 0.5))
     if name in LEARNED:
         return PolicyScheduler(name, num_engines=num_engines,
                                **policy_kwargs)

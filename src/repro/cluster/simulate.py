@@ -124,6 +124,11 @@ def evaluate_scheduler(scheduler: Scheduler, p: envlib.EnvParams,
             all_wrong.append(np.asarray(res[3])[sel])
     delays = np.concatenate(all_delays) if all_delays else np.zeros((0,))
     out = {"count": int(delays.size), **_percentiles(delays)}
+    # schema parity with the live summarize(): the slot-based sim has no
+    # KV model, so cache efficiency is identically zero here — but the
+    # keys exist so sim and live records compare column-for-column
+    out["prefill_tokens_saved"] = 0
+    out["prefix_hit_rate"] = 0.0
     if p.has_faults:
         wrong = (np.concatenate(all_wrong) if all_wrong
                  else np.zeros((0,), bool))

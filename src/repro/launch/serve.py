@@ -51,6 +51,8 @@ def build_scheduler(name: str, n_edge: int, train_episodes: int, seed: int,
                          "observation; pass --qos")
     if name == "failure-aware":
         return make_scheduler(name, n_edge, qos=qos)
+    if name == "prefix-affinity":
+        return make_scheduler(name, n_edge, qos=qos, fault=chaos)
     if name in BASELINES:
         return make_scheduler(name, n_edge)
     if name not in LEARNED:
@@ -76,6 +78,7 @@ def main():
     ap.add_argument("--edges", type=int, default=2)
     ap.add_argument("--scheduler", default="jsq",
                     help="jsq | round-robin | random | local | deadline | "
+                         "prefix-affinity | failure-aware | "
                          "lad-ts | d2sac-ts | sac-ts | dqn-ts")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--rate", type=float, default=4.0,
@@ -92,6 +95,13 @@ def main():
                          "crash + one slowdown) and retry orphans")
     ap.add_argument("--fault-seed", type=int, default=0,
                     help="seed for the --chaos fault schedule")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="share a seeded system-prompt prefix of this many "
+                         "tokens across --prefix-frac of the trace (paged "
+                         "engines serve repeats from the prefix cache)")
+    ap.add_argument("--prefix-frac", type=float, default=0.75)
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the paged engines' prefix cache")
     ap.add_argument("--sample", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -102,7 +112,9 @@ def main():
     engines = build_engines(args.arch, args.edges,
                             args.prompt_len + max_tokens
                             + reduced(get_config(args.arch)).vision_patches,
-                            kv_slots=args.kv_slots, sample=args.sample)
+                            kv_slots=args.kv_slots, sample=args.sample,
+                            prefix_cache=(False if args.no_prefix_cache
+                                          else None))
     cfg0 = engines[0].cfg
     vocab = cfg0.vocab_size
     warmup(engines, args.prompt_len)       # compile before timed serving
@@ -128,7 +140,9 @@ def main():
                           max_new_tokens=args.tokens, vocab_size=vocab,
                           num_origins=args.edges, seed=args.seed,
                           num_codebooks=cfg0.num_codebooks,
-                          qos_mix=DEFAULT_MIX if args.qos else None)
+                          qos_mix=DEFAULT_MIX if args.qos else None,
+                          prefix_len=args.prefix_len,
+                          prefix_frac=args.prefix_frac)
     if cfg0.vision_patches:
         for r in trace:
             r.patches = jax.random.normal(
@@ -151,6 +165,9 @@ def main():
     line = (f"[serve] {scheduler.name}: n={st['count']} "
             f"mean={st['mean_s']*1e3:.1f}ms p95={st['p95_s']*1e3:.1f}ms "
             f"max={st['max_s']*1e3:.1f}ms")
+    if st["prefill_tokens_saved"]:
+        line += (f" prefix_saved={st['prefill_tokens_saved']}tok"
+                 f" hit={st['prefix_hit_rate']:.2f}")
     if args.chaos:
         fs = cluster.fault_stats
         line += (f" cr={st['completion_rate']:.3f}"

@@ -39,6 +39,7 @@ def build_engines(arch: str, n_edge: int, max_len: int, *,
                   seed0: int = 0, paged: Optional[bool] = None,
                   page_size: int = 16, max_lanes: Optional[int] = None,
                   prefill_chunk: int = 64,
+                  prefix_cache: Optional[bool] = None,
                   mesh=None) -> List[ServeEngine]:
     """n_edge reduced-config replicas of ``arch`` with per-engine depth.
 
@@ -57,6 +58,7 @@ def build_engines(arch: str, n_edge: int, max_len: int, *,
                                    paged=paged, page_size=page_size,
                                    max_lanes=max_lanes,
                                    prefill_chunk=prefill_chunk,
+                                   prefix_cache=prefix_cache,
                                    arch_id=arch, mesh=mesh))
     return engines
 
@@ -67,6 +69,7 @@ def build_fleet(archs: Sequence[str], max_len: int, *,
                 seed0: int = 0, paged: Optional[bool] = None,
                 page_size: int = 16, max_lanes: Optional[int] = None,
                 prefill_chunk: int = 64,
+                prefix_cache: Optional[bool] = None,
                 mesh=None) -> List[ServeEngine]:
     """Heterogeneous fleet: one engine PER ENTRY of ``archs``.
 
@@ -90,6 +93,7 @@ def build_fleet(archs: Sequence[str], max_len: int, *,
                                    paged=paged, page_size=page_size,
                                    max_lanes=max_lanes,
                                    prefill_chunk=prefill_chunk,
+                                   prefix_cache=prefix_cache,
                                    arch_id=arch, mesh=mesh))
     return engines
 
@@ -100,6 +104,7 @@ def build_sharded_engine(arch: str, max_len: int, *, mesh=None,
                          paged: Optional[bool] = None, page_size: int = 16,
                          max_lanes: Optional[int] = None,
                          prefill_chunk: int = 64,
+                         prefix_cache: Optional[bool] = None,
                          seed: int = 0) -> ServeEngine:
     """One BIG-model engine with params + KV placed across a mesh.
 
@@ -125,7 +130,7 @@ def build_sharded_engine(arch: str, max_len: int, *, mesh=None,
     return ServeEngine(cfg, params, max_len=max_len, kv_slots=kv_slots,
                        sample=sample, paged=paged, page_size=page_size,
                        max_lanes=max_lanes, prefill_chunk=prefill_chunk,
-                       arch_id=arch, mesh=mesh)
+                       prefix_cache=prefix_cache, arch_id=arch, mesh=mesh)
 
 
 def warmup(engines: Sequence[ServeEngine], prompt_len: int,

@@ -125,3 +125,20 @@ def paged_decode_step(cfg, num_pages: int, page_size: int, sample: bool,
         lambda: jax.jit(make_paged_decode_step(cfg, sample=sample,
                                                temperature=temperature),
                         donate_argnums=2))
+
+
+def page_copy_step(cfg, num_pages: int, page_size: int, mesh=None) -> Callable:
+    """Jitted copy-on-write page fork: every per-layer K/V pool copies
+    physical page ``src`` onto page ``dst`` in place (donated states, and
+    src/dst are traced scalars so one compile covers every fork).  Used
+    when a lane's prompt diverges MID-block from a cached prefix: the
+    matched head of the cached page is duplicated so the lane can
+    overwrite its private tail without corrupting the shared original."""
+    def build():
+        def copy(states, src, dst):
+            return jax.tree_util.tree_map(
+                lambda a: a.at[dst].set(a[src]), states)
+
+        return jax.jit(copy, donate_argnums=0)
+
+    return _get(("page_copy", cfg, num_pages, page_size, mesh), build)

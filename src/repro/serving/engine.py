@@ -71,7 +71,8 @@ from repro.cluster.request import Request
 from repro.faults.policy import AVAILABILITY, Health
 from repro.launch import sharding as shlib
 from repro.serving import compiled
-from repro.serving.paged_kv import BlockTable, PagePool, cdiv, paged_supported
+from repro.serving.paged_kv import (BlockTable, PagePool, PrefixCache, cdiv,
+                                    paged_supported)
 from repro.workload.capability import EngineCapability, cold_token_seconds
 from repro.workload.queueing import EDFQueue
 
@@ -142,6 +143,7 @@ class ServeEngine:
                  num_pages: Optional[int] = None,
                  max_lanes: Optional[int] = None,
                  prefill_chunk: int = 64,
+                 prefix_cache: Optional[bool] = None,
                  arch_id: Optional[str] = None,
                  mesh=None):
         self.cfg = cfg
@@ -175,6 +177,11 @@ class ServeEngine:
         self._stall_until = 0.0        # DEGRADED: frozen until this clock
         self._slow_every = 1           # DEGRADED: serve 1 step out of k
         self._step_seq = 0
+        # prefix-cache accounting (0 forever on dense / cache-off engines)
+        self.prefill_tokens_saved = 0
+        self.prefix_hits = 0
+        self.prefix_lookups = 0
+        self.cow_forks = 0
 
         self.paged = paged_supported(cfg) if paged is None else bool(paged)
         if self.paged:
@@ -197,7 +204,18 @@ class ServeEngine:
                 cfg, num_pages, page_size, mesh=mesh)
             self._paged_decode = compiled.paged_decode_step(
                 cfg, num_pages, page_size, sample, temperature, mesh=mesh)
+            # automatic prefix caching (on by default for paged engines):
+            # completed prompt blocks stay resident, refcount-shared with
+            # later prompts that hash to the same token-block chain
+            if prefix_cache is None or prefix_cache:
+                self._prefix: Optional[PrefixCache] = PrefixCache(self._pool)
+                self._page_copy = compiled.page_copy_step(
+                    cfg, num_pages, page_size, mesh=mesh)
+            else:
+                self._prefix = None
+                self._page_copy = None
         else:
+            self._prefix = None
             self._prefill = compiled.prefill_step(cfg, max_len, mesh=mesh)
             self._slots: List[Optional[Request]] = [None] * kv_slots
             self._last_tok: List[Optional[np.ndarray]] = [None] * kv_slots
@@ -392,20 +410,59 @@ class ServeEngine:
         free = [i for i, ln in enumerate(self._lanes) if ln is None]
         while free and self._queue:
             req = self._queue[0]
-            total = self._prompt_len(req) + req.max_new_tokens
+            plen = self._prompt_len(req)
+            total = plen + req.max_new_tokens
             need = self._pool.pages_needed(total)
             if need > self._row_width - 1 - cdiv(self.prefill_chunk,
                                                  self.page_size):
                 raise ValueError(
                     f"request needs {need} pages > per-request capacity "
                     f"(max_len={self.max_len})")
-            if not self._pool.can_alloc(need):
+            # prefix match: reuse every cached page whose token-block
+            # chain equals this prompt's.  The match is capped at
+            # plen - 1 so at least one position is always prefilled
+            # (the last-chunk logits produce the first token).
+            m = None
+            if self._prefix is not None:
+                m = self._prefix.match(req.prompt, max_tokens=plen - 1)
+                self.prefix_lookups += 1
+            shared = m.pages if m is not None else []
+            # retain matched pages FIRST so eviction below can never free
+            # them, then make room for the private remainder by evicting
+            # LRU cached leaves if needed
+            if m is not None:
+                self._prefix.acquire(m)
+            need_new = need - len(shared)
+            ok = (self._pool.num_free >= need_new
+                  or (self._prefix is not None
+                      and self._prefix.ensure_free(need_new)))
+            if not ok:
+                if m is not None:
+                    self._prefix.release_match(m)
                 break
             self._queue.popleft()
             i = free.pop(0)
-            self._lanes[i] = _Lane(req=req,
-                                   table=BlockTable(self._pool, total),
-                                   prompt_len=self._prompt_len(req))
+            table = BlockTable(self._pool, total, shared=shared)
+            matched = len(shared) * self.page_size
+            if m is not None and m.cow_page is not None:
+                # copy-on-write fork: the lane diverges mid-block, so it
+                # gets a device-side copy of the partially-matching
+                # cached page and re-prefills only from the divergence
+                self._ensure_paged_states()
+                dst = table.pages[len(shared)]
+                with self._sharded():
+                    self._paged_states = self._page_copy(
+                        self._paged_states, jnp.int32(m.cow_page),
+                        jnp.int32(dst))
+                self._pool.release([m.cow_page])   # fork done: drop src
+                matched += m.cow_tokens
+                self.cow_forks += 1
+            if matched:
+                self.prefix_hits += 1
+                self.prefill_tokens_saved += matched
+                req.prefix_tokens = matched
+            self._lanes[i] = _Lane(req=req, table=table, prompt_len=plen,
+                                   chunk_pos=matched, length=matched)
         self._note_inflight(sum(ln is not None for ln in self._lanes))
 
         # 2. one prefill chunk per still-prefilling lane (device enqueue
@@ -416,8 +473,8 @@ class ServeEngine:
             if lane is None or lane.decoding:
                 continue
             req = lane.req
-            if lane.chunk_pos == 0:
-                req.t_prefill_start = self._clock()
+            if req.t_prefill_start is None:    # first chunk (chunk_pos may
+                req.t_prefill_start = self._clock()  # start past 0 on a hit)
             c0 = lane.chunk_pos
             chunk = np.asarray(req.prompt[..., c0:c0 + C])
             pad = C - chunk.shape[-1]
@@ -443,6 +500,12 @@ class ServeEngine:
                 lane.last_tok = tok
                 fin = len(req.tokens) >= req.max_new_tokens
                 pend.prefill.append((req, tok, pos, fin))
+                # the prompt's KV is complete: index every full prompt
+                # block so later prompts with the same chain reuse it
+                # (insert BEFORE any lane release so cached pages carry
+                # their reference when the lane lets go)
+                if self._prefix is not None:
+                    self._prefix.insert(req.prompt, lane.table.pages)
                 if fin:
                     self._free_lane(i)
 
@@ -504,7 +567,11 @@ class ServeEngine:
         Device pool contents need no zeroing — every KV position is
         written before it is read — but the rate EWMA and the request-id
         counter must restart or a reused engine reports the previous
-        run's backlog estimate and non-monotonic request ids."""
+        run's backlog estimate and non-monotonic request ids.  Paged
+        engines release every lane and prefix-cache reference through the
+        refcount path and ASSERT the pool returns to all-free — a reset
+        is the one moment the refcount books must balance exactly, so a
+        leak here is a bug, not a condition to paper over."""
         self._queue.clear()
         self._ewma_tok_s = 0.0
         self._next_rid = 0
@@ -515,8 +582,22 @@ class ServeEngine:
         self._stall_until = 0.0
         self._slow_every = 1
         self._step_seq = 0
+        self.prefill_tokens_saved = 0
+        self.prefix_hits = 0
+        self.prefix_lookups = 0
+        self.cow_forks = 0
         if self.paged:
+            for i, lane in enumerate(self._lanes):
+                if lane is not None:
+                    lane.table.release()
             self._lanes = [None] * self.max_lanes
+            if self._prefix is not None:
+                self._prefix.clear()
+            if self._pool.num_free != self.num_pages - 1:
+                raise RuntimeError(
+                    f"page pool leak on reset: {self._pool.num_free} free "
+                    f"of {self.num_pages - 1} allocatable after releasing "
+                    f"all lanes and the prefix cache")
             self._pool.reset()
         else:
             self._slots = [None] * self.kv_slots
@@ -590,13 +671,19 @@ class ServeEngine:
 
     @property
     def kv_leak(self) -> int:
-        """Outstanding KV reservations (pages, or busy dense slots).
+        """Outstanding KV reservations (page references, or busy dense
+        slots), net of the prefix cache's deliberate residency.
 
-        0 whenever the engine is idle — the crash-recovery invariant the
-        chaos tests assert: a crash mid-prefill or mid-decode must return
-        the accounting to zero."""
+        The prefix cache holds exactly ONE pool reference per entry, so
+        ``total_refs - cache.size`` counts every reference owed to live
+        lanes.  0 whenever the engine is idle — the crash-recovery
+        invariant the chaos tests assert, now refcount-exact: a crash
+        mid-prefill on a SHARED prefix must drop only the crashed lane's
+        references, leaving cached pages resident and every refcount
+        right."""
         if self.paged:
-            return self.num_pages - 1 - self._pool.num_free
+            held = self._prefix.size if self._prefix is not None else 0
+            return self._pool.total_refs - held
         return sum(r is not None for r in self._slots)
 
     def shed(self, pred) -> List[Request]:
@@ -630,6 +717,39 @@ class ServeEngine:
         """Measured backlog estimate: pending tokens x EWMA token time."""
         return self.pending_tokens * self._ewma_tok_s
 
+    # ------------------------------------------------------------------
+    # prefix-cache signals (the scheduler's affinity feature)
+    # ------------------------------------------------------------------
+    def expected_prefix_tokens(self, req: Request) -> int:
+        """Prompt tokens this engine could skip for ``req`` RIGHT NOW — a
+        pure peek against the prefix index (no reference taken, no LRU
+        bump).  0 for dense / cache-off engines.  This is the per-engine
+        observation feature the prefix-affinity scheduler routes on: the
+        paper's thesis is to send work where it finishes fastest, and a
+        matched prefix is compute already done."""
+        if not self.paged or self._prefix is None:
+            return 0
+        m = self._prefix.match(req.prompt,
+                               max_tokens=self._prompt_len(req) - 1)
+        return m.tokens
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admissions that reused at least one cached page."""
+        if not self.prefix_lookups:
+            return 0.0
+        return self.prefix_hits / self.prefix_lookups
+
+    @property
+    def prefix_cached_pages(self) -> int:
+        return self._prefix.size if (self.paged and self._prefix is not None
+                                     ) else 0
+
+    @property
+    def prefix_evictions(self) -> int:
+        return (self._prefix.evictions
+                if (self.paged and self._prefix is not None) else 0)
+
     @property
     def est_token_seconds(self) -> float:
         """Seconds per decode token: measured EWMA once the engine has run
@@ -652,7 +772,10 @@ class ServeEngine:
             rho_gcycles=2.0 * active / 1e9,
             tok_s=1.0 / self.est_token_seconds,
             measured=self._ewma_tok_s > 0,
-            paged=self.paged)
+            paged=self.paged,
+            prefix_hit_rate=self.prefix_hit_rate,
+            prefix_cached_tokens=self.prefix_cached_pages * (
+                self.page_size if self.paged else 0))
 
     # ------------------------------------------------------------------
     # blocking compatibility API

@@ -41,6 +41,13 @@ class EngineCapability:
     tok_s: float              # decode throughput (tokens/s): live f_b'
     measured: bool            # tok_s from EWMA (True) or cold prior
     paged: bool               # serves from the shared KV page pool
+    # prefix caching (repro.serving.paged_kv): what fraction of this
+    # engine's admissions reused cached prompt KV, and how many prompt
+    # tokens it currently holds resident — the expected-prefix-hit
+    # signal the prefix-affinity scheduler routes on (0 for dense /
+    # cache-off engines)
+    prefix_hit_rate: float = 0.0
+    prefix_cached_tokens: int = 0
 
     @property
     def token_seconds(self) -> float:

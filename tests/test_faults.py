@@ -140,6 +140,39 @@ def test_crash_mid_prefill_and_mid_decode_reclaims_kv(paged):
     assert e.kv_leak == 0
 
 
+def test_crash_mid_prefill_shared_prefix_reclaims_only_unshared():
+    """A crash mid-prefill on a lane that shares a cached prefix must
+    drop ONLY that lane's references: cached pages stay resident (the
+    cache's own refs), refcounts return to exactly one-per-entry
+    (kv_leak == 0), and the retried request hits the cache again."""
+    e = _engine(paged=True, kv_slots=2, max_len=64, page_size=8,
+                prefill_chunk=8)
+    prompt = _prompt(e, 1, 24, seed=42)
+    done = e.generate(prompt, 2)               # seed the prefix cache
+    assert len(done.tokens) == 2
+    cached = e.prefix_cached_pages
+    assert cached == 3                         # 24 tokens / page 8
+    r = _req(1, prompt, tokens=4)
+    e.admit(r)
+    e.step()                                   # mid-prefill, prefix shared
+    assert r.prefix_tokens == 23               # 2 full pages + 7 COW
+    assert e.kv_leak > 0                       # lane refs actually held
+    orphans = e.fail("crash mid-prefill on shared prefix")
+    assert orphans == [r]
+    assert e.kv_leak == 0                      # only unshared refs dropped
+    assert e.prefix_cached_pages == cached     # cache intact through crash
+    assert e._pool.total_refs == cached        # exactly 1 ref per entry
+    e.recover()
+    r.reset_for_retry()
+    saved0 = e.prefill_tokens_saved
+    e.admit(r)
+    out = e.run_to_completion()
+    assert [x.rid for x in out] == [1]
+    assert len(r.tokens) == 4
+    assert e.prefill_tokens_saved == saved0 + 23   # retry hit the cache
+    assert e.kv_leak == 0
+
+
 def test_down_engine_rejects_admission_and_degraded_modes():
     e = _engine(paged=False, kv_slots=1)
     e.fail("boom")
